@@ -1,0 +1,379 @@
+"""Benchmark harness — one benchmark per paper table/figure, plus kernel
+microbenches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  Table I  -> projected ResNet-50/ImageNet epoch + 90-epoch time on v5e
+              meshes (roofline model), vs the paper's 74.7 s on 2048 V100.
+  Fig. 2   -> scalability: projected images/sec vs chip count; derived =
+              parallel efficiency at 2048 chips (paper: 77.0%).
+  Fig. 3   -> REAL small-scale training: final eval accuracy vs global
+              batch (LARS + warmup + smoothing recipe) on prototype-ImageNet.
+  Fig. 4   -> train-vs-val accuracy gap for the Fig.3 run (overfit check).
+  ablation -> LARS vs SGD-M at high lr; label smoothing on/off (§III-A).
+  kernels  -> batched-norm / fused-LARS / smoothed-xent vs unfused baselines.
+  comm     -> bucketed vs per-tensor allreduce on 8 host devices (§III-C).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# ----------------------------------------------------------- Table I / Fig 2
+
+V5E_PEAK = 197e12       # bf16 flops/chip
+V5E_ICI = 50e9          # bytes/s/link
+RESNET_FLOPS_IMG = 3 * 4.1e9          # train flops per 224x224 image
+RESNET_BYTES = 25.6e6 * 2             # bf16 gradient bytes per replica
+
+
+def projected_images_per_sec(chips: int, *, global_batch: int = 81920,
+                             mfu: float = 0.45) -> float:
+    """Roofline-style projection: per-step compute at `mfu` of peak,
+    overlapped with a ring all-reduce of the gradients on the DP axis
+    (the paper's §III-C overlap ⇒ step time = max(compute, comm) + bucket
+    tail latency)."""
+    per_chip = global_batch / chips
+    t_compute = per_chip * RESNET_FLOPS_IMG / (V5E_PEAK * mfu)
+    ring = 2 * RESNET_BYTES * (chips - 1) / chips / V5E_ICI
+    n_buckets = max(1, int(RESNET_BYTES / (4 * 2**20)))
+    tail = ring / n_buckets                      # last bucket can't overlap
+    t_step = max(t_compute, ring) + tail
+    return global_batch / t_step
+
+
+def bench_table1(quick: bool):
+    """Paper Table I analogue: time-to-90-epochs projections."""
+    t0 = time.perf_counter()
+    for chips, batch in [(256, 81920), (512, 81920), (2048, 81920)]:
+        ips = projected_images_per_sec(chips, global_batch=batch)
+        t_epoch = 1_281_167 / ips
+        t90 = 90 * t_epoch
+        emit(f"table1.v5e_{chips}chips_b{batch}",
+             (time.perf_counter() - t0) * 1e6,
+             f"proj {ips/1e6:.2f}M img/s; 90ep {t90:.0f}s "
+             f"(paper@2048V100: 74.7s / 1.73M img/s)")
+
+
+def bench_fig2(quick: bool):
+    t0 = time.perf_counter()
+    base = None
+    for chips in [16, 64, 256, 512, 1024, 2048]:
+        ips = projected_images_per_sec(chips)
+        if base is None:
+            base = ips / 16
+        eff = ips / (base * chips)
+        emit(f"fig2.scalability_{chips}", (time.perf_counter() - t0) * 1e6,
+             f"{ips/1e6:.2f}M img/s eff={eff*100:.1f}%"
+             + (" (paper: 77.0%)" if chips == 2048 else ""))
+
+
+# ------------------------------------------------------------- Fig 3 / Fig 4
+
+def _train_resnet(batch: int, steps: int, *, lr=None, smoothing=0.1,
+                  opt="lars", warmup_frac=0.15, seed=0):
+    from repro.configs import get_config
+    from repro.configs.shapes import InputShape
+    from repro.core import lars as lars_mod
+    from repro.core.schedule import ScheduleConfig, linear_scaled_lr, \
+        make_schedule
+    from repro.data.synthetic import make_batch_fn, prototype_imagenet
+    from repro.models.registry import build_model
+    from repro.train import state as st
+    from repro.train.step import make_eval_step, make_train_step
+
+    cfg = get_config("resnet50").reduced()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    model = build_model(cfg)
+    if lr is None:
+        lr = linear_scaled_lr(16.0, batch) / 4     # tuned for the toy task
+        # (LARS trust_coef=1e-3 makes effective matrix lr ~1e-3*base)
+    sched = make_schedule(ScheduleConfig(
+        base_lr=lr, warmup_steps=int(steps * warmup_frac),
+        total_steps=steps, decay="poly2"))
+    step = jax.jit(make_train_step(
+        model, lars_mod.OptConfig(kind=opt), sched, smoothing=smoothing,
+        mesh=mesh))
+    bf = make_batch_fn(cfg, InputShape("t", "train", 0, batch), seed=seed,
+                       mesh=mesh)
+    s = st.init_state(model, seed)
+    hist = []
+    for i in range(steps):
+        s, m = step(s, bf(s.step))
+        hist.append(float(m["acc"]))
+    ev = jax.jit(make_eval_step(model, mesh=mesh))
+    accs = []
+    for k in range(4):
+        eb = prototype_imagenet(cfg, batch=64, step=jnp.int32(10_000 + k),
+                                seed=seed)
+        accs.append(float(ev(s.params, eb, s.bn_state)["acc"]))
+    return float(np.mean(accs)), hist
+
+
+def bench_fig3(quick: bool):
+    """Accuracy vs batch size with the paper's recipe, at FIXED total
+    examples (the paper fixes epochs: bigger batch = fewer updates — that
+    scarcity is exactly the large-batch challenge of §IV/Fig.3)."""
+    total_examples = 64 * (25 if quick else 60)
+    for batch in ([16, 64] if quick else [16, 64, 256]):
+        steps = max(total_examples // batch, 8)
+        t0 = time.perf_counter()
+        acc, _ = _train_resnet(batch, steps)
+        emit(f"fig3.acc_vs_batch_b{batch}", (time.perf_counter() - t0) * 1e6,
+             f"eval_acc={acc:.3f} steps={steps} (fixed {total_examples} "
+             f"examples)")
+
+
+def bench_fig4(quick: bool):
+    steps = 25 if quick else 60
+    t0 = time.perf_counter()
+    acc, hist = _train_resnet(64, steps)
+    train_acc = float(np.mean(hist[-5:]))
+    emit("fig4.train_vs_val_gap", (time.perf_counter() - t0) * 1e6,
+         f"train_acc={train_acc:.3f} val_acc={acc:.3f} "
+         f"gap={train_acc-acc:+.3f}")
+
+
+# ----------------------------------------------- ablations (paper §III-A)
+
+def bench_lars_ablation(quick: bool):
+    """LARS vs plain SGD-momentum at aggressive lr (paper's core claim)."""
+    steps = 20 if quick else 40
+    for opt in ("lars", "sgdm"):
+        t0 = time.perf_counter()
+        acc, _ = _train_resnet(64, steps, lr=8.0, opt=opt)
+        emit(f"ablation.highlr_{opt}", (time.perf_counter() - t0) * 1e6,
+             f"eval_acc={acc:.3f} @lr=8 (paper: LARS stays usable at the "
+             f"large-batch lr where plain SGD degrades)")
+
+
+def bench_bn_momentum_ablation(quick: bool):
+    """Paper SIII-A.2: 'we tuned some hyper-parameters to optimize the
+    moving averages' — BN momentum sweep at the eval boundary."""
+    import dataclasses
+    from repro.configs import get_config
+    steps = 20 if quick else 40
+    for mom in (0.8, 0.9, 0.99):
+        t0 = time.perf_counter()
+        import repro.configs.resnet50 as r50
+        base = get_config("resnet50").reduced()
+        cfg = dataclasses.replace(base, bn_momentum=mom)
+        acc, _ = _train_resnet_cfg(cfg, 64, steps)
+        emit(f"ablation.bn_momentum_{mom}", (time.perf_counter() - t0) * 1e6,
+             f"eval_acc={acc:.3f}")
+
+
+def _train_resnet_cfg(cfg, batch, steps, *, lr=None, smoothing=0.1,
+                      opt="lars", seed=0):
+    from repro.configs.shapes import InputShape
+    from repro.core import lars as lars_mod
+    from repro.core.schedule import ScheduleConfig, linear_scaled_lr, \
+        make_schedule
+    from repro.data.synthetic import make_batch_fn, prototype_imagenet
+    from repro.models.registry import build_model
+    from repro.train import state as st
+    from repro.train.step import make_eval_step, make_train_step
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    model = build_model(cfg)
+    if lr is None:
+        lr = linear_scaled_lr(16.0, batch) / 4
+    sched = make_schedule(ScheduleConfig(
+        base_lr=lr, warmup_steps=int(steps * 0.15), total_steps=steps,
+        decay="poly2"))
+    step = jax.jit(make_train_step(
+        model, lars_mod.OptConfig(kind=opt), sched, smoothing=smoothing,
+        mesh=mesh))
+    bf = make_batch_fn(cfg, InputShape("t", "train", 0, batch), seed=seed,
+                       mesh=mesh)
+    s = st.init_state(model, seed)
+    for i in range(steps):
+        s, m = step(s, bf(s.step))
+    ev = jax.jit(make_eval_step(model, mesh=mesh))
+    accs = [float(ev(s.params, prototype_imagenet(
+        cfg, batch=64, step=jnp.int32(10_000 + k), seed=seed),
+        s.bn_state)["acc"]) for k in range(4)]
+    return float(np.mean(accs)), None
+
+
+def bench_smoothing_ablation(quick: bool):
+    steps = 20 if quick else 40
+    for sm in (0.0, 0.1):
+        t0 = time.perf_counter()
+        acc, _ = _train_resnet(64, steps, smoothing=sm)
+        emit(f"ablation.smoothing_{sm}", (time.perf_counter() - t0) * 1e6,
+             f"eval_acc={acc:.3f}")
+
+
+# ----------------------------------------------------------------- kernels
+
+def bench_kernel_batched_norm(quick: bool):
+    """Paper §III-B.2: batched norms vs one-reduce-per-tensor."""
+    from repro.core import bucketing
+    from repro.kernels import ops, ref
+    n_tensors, chunks_each = (16, 4) if quick else (64, 8)
+    n_chunks = n_tensors * chunks_each
+    seg = jnp.asarray(np.repeat(np.arange(n_tensors), chunks_each)
+                      .astype(np.int32))
+    flat = jax.random.normal(jax.random.PRNGKey(0),
+                             (n_chunks * bucketing.CHUNK,))
+    tensors = [flat[i * chunks_each * bucketing.CHUNK:
+                    (i + 1) * chunks_each * bucketing.CHUNK]
+               for i in range(n_tensors)]
+
+    @jax.jit
+    def per_tensor():
+        return jnp.stack([jnp.sum(t * t) for t in tensors])
+
+    @jax.jit
+    def packed():
+        return ref.batched_sumsq(flat, seg, n_tensors)
+
+    us_sep, a = _timeit(per_tensor)
+    us_pack, b = _timeit(packed)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+    # kernel correctness cross-check (interpret mode; CPU timing meaningless)
+    c = ops.batched_sumsq(flat, seg, n_tensors)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a), rtol=1e-4)
+    emit("kernel.batched_norm_packed", us_pack,
+         f"vs per-tensor {us_sep:.0f}us ({us_sep/us_pack:.2f}x) "
+         f"n_tensors={n_tensors}")
+
+
+def bench_kernel_smoothed_xent(quick: bool):
+    from repro.core.label_smoothing import smoothed_xent
+    from repro.kernels import ref
+    T, V = (2048, 8192) if quick else (4096, 32_768)
+    k = jax.random.PRNGKey(1)
+    logits = jax.random.normal(k, (T, V))
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (T,), 0, V)
+
+    naive = jax.jit(lambda l, y: smoothed_xent(l, y, smoothing=0.1)[0])
+    fused = jax.jit(lambda l, y: ref.smoothed_xent_rows(
+        l, y, smoothing=0.1).mean())
+    us_naive, a = _timeit(naive, logits, labels)
+    us_fused, b = _timeit(fused, logits, labels)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+    emit("kernel.smoothed_xent", us_fused,
+         f"vs naive {us_naive:.0f}us T={T} V={V}")
+
+
+def bench_kernel_lars_update(quick: bool):
+    from repro.core import bucketing
+    from repro.kernels import ref
+    n_chunks = 64 if quick else 256
+    N = n_chunks * bucketing.CHUNK
+    k = jax.random.PRNGKey(2)
+    p = jax.random.normal(k, (N,))
+    g = jax.random.normal(jax.random.fold_in(k, 1), (N,))
+    m = jnp.zeros(N)
+    n_tensors = 8
+    seg = jnp.asarray(np.repeat(np.arange(n_tensors), n_chunks // n_tensors)
+                      .astype(np.int32))
+    trust = jnp.abs(jax.random.normal(jax.random.fold_in(k, 3),
+                                      (n_tensors,)))
+
+    fused = jax.jit(lambda: ref.lars_packed_update(
+        p, g, m, trust, seg, lr=0.1, momentum=0.9, wd=1e-4))
+    us, _ = _timeit(fused)
+    emit("kernel.lars_packed_update", us, f"N={N} fp32 fused step")
+
+
+# ------------------------------------------------- comm (paper §III-C)
+
+def bench_comm_bucketing(quick: bool):
+    """Bucketed vs per-tensor psum wall time on 8 host devices (subprocess:
+    jax device count locks at init)."""
+    import subprocess
+    import sys
+    t0 = time.perf_counter()
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, time
+from jax.sharding import PartitionSpec as P
+from repro.core import bucketing, ddp
+mesh = jax.make_mesh((8,), ("data",))
+ks = jax.random.split(jax.random.PRNGKey(0), 120)
+tree = {f"t{i}": jax.random.normal(ks[i], ((i % 7 + 1) * 96, 128))
+        for i in range(120)}
+plan = bucketing.make_plan(tree, bucket_mb=4.0)
+def naive(t):
+    return ddp.allreduce_grads(t, strategy="naive", axes=("data",))
+def bucketed(t):
+    return ddp.allreduce_grads(t, strategy="bucketed", axes=("data",),
+                               plan=plan)
+spec = jax.tree.map(lambda _: P(), tree)
+for name, fn in [("naive", naive), ("bucketed", bucketed)]:
+    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
+                              out_specs=spec))
+    jax.block_until_ready(f(tree))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(f(tree))
+    print(f"{name},{(time.perf_counter()-t0)/5*1e6:.0f}")
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    res = dict(line.split(",") for line in r.stdout.strip().splitlines()
+               if "," in line)
+    if "naive" in res and "bucketed" in res:
+        sp = float(res["naive"]) / float(res["bucketed"])
+        # host-CPU psum is memcpy-bound with no message latency; project
+        # the interconnect time with an alpha-beta model on v5e ICI:
+        alpha_us, bw = 10.0, 50e9
+        grad_bytes = sum((i % 7 + 1) * 96 * 128 * 4 for i in range(120))
+        ring_us = 2 * grad_bytes * 7 / 8 / bw * 1e6
+        t_naive = 120 * alpha_us + ring_us
+        t_bucketed = 13 * alpha_us + ring_us
+        emit("comm.bucketed_allreduce", float(res["bucketed"]),
+             f"wall(hostCPU)={sp:.2f}x; v5e alpha-beta projection: "
+             f"{t_naive:.0f}us -> {t_bucketed:.0f}us = "
+             f"{t_naive/t_bucketed:.2f}x (120->13 messages, paper SIII-C.1)")
+    else:
+        emit("comm.bucketed_allreduce", (time.perf_counter() - t0) * 1e6,
+             f"FAILED: {r.stderr[-200:]}")
+
+
+ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
+       bench_lars_ablation, bench_smoothing_ablation,
+       bench_bn_momentum_ablation,
+       bench_kernel_batched_norm, bench_kernel_smoothed_xent,
+       bench_kernel_lars_update, bench_comm_bucketing]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        fn(args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's experiment, end to end at laptop scale: ResNet-50 (reduced)
+on prototype-ImageNet with the full recipe — LARS, warm-up, tuned decay,
+label smoothing, per-process BN, bucketed-overlap gradient all-reduce —
+and MLPerf-style logging exactly like the paper's Appendix 1.
+
+  PYTHONPATH=src python examples/train_resnet_imagenet.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, linear_scaled_lr, \
+    make_schedule
+from repro.data.synthetic import make_batch_fn, prototype_imagenet
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.train import loop
+from repro.train.state import init_state
+from repro.train.step import make_eval_step, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--comm", default="bucketed",
+                    choices=["bucketed", "naive", "xla"])
+    args = ap.parse_args()
+
+    cfg = get_config("resnet50").reduced()
+    mesh = make_local_mesh()
+    model = build_model(cfg)
+
+    lr = linear_scaled_lr(16.0, args.batch) / 4   # toy-task tuned
+    sched = make_schedule(ScheduleConfig(
+        base_lr=lr, warmup_steps=args.steps // 8, total_steps=args.steps,
+        decay="poly2"))
+    train_step = make_train_step(
+        model, lars.OptConfig(kind="lars", weight_decay=5e-5), sched,
+        smoothing=0.1, mesh=mesh, comm=args.comm, bucket_mb=4.0)
+    eval_step = make_eval_step(model, mesh=mesh)
+    batch_fn = make_batch_fn(cfg, InputShape("in", "train", 0, args.batch),
+                             mesh=mesh)
+
+    def eval_batch_fn(step):
+        return prototype_imagenet(cfg, batch=128, step=step)
+
+    state = init_state(model, seed=100000, mesh=mesh)   # paper's seed tag
+    state, history = loop.train(
+        state, train_step, batch_fn, steps=args.steps,
+        eval_step=eval_step, eval_batch_fn=eval_batch_fn,
+        eval_every=max(args.steps // 4, 1), log_every=20)
+    evals = [h for h in history if "eval_acc" in h]
+    if evals:
+        print(f"\nfinal eval accuracy: {evals[-1]['eval_acc']:.3f} "
+              f"(paper, full scale: 0.75082)")
+
+
+if __name__ == "__main__":
+    main()

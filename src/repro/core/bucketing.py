@@ -1,0 +1,117 @@
+"""Gradient bucketing (paper §III-C.1) and static layer groups (§III-C.2).
+
+The paper: "we gathered gradients of layers and adjusted the data size of
+allreduce to several megabytes" and "we statically group layers into several
+groups beforehand" so the all-reduce of a finished group overlaps with the
+backward pass of the next.
+
+``BucketPlan`` is computed once from the parameter descriptor tree (static —
+it never depends on runtime values) in **reverse flatten order**, which for
+our stacked-layer trees approximates backward-completion order. ``pack`` /
+``unpack`` move a gradient pytree into/out of the flat per-bucket buffers
+between which the collectives run.
+
+Chunk-aligned packing (every tensor padded to CHUNK elements) also feeds the
+batched-norm Pallas kernel: the packed buffer plus per-chunk segment ids is
+exactly the kernel's input layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK = 1024  # 8 sublanes x 128 lanes — TPU-aligned packing quantum
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSlot:
+    path: str
+    shape: Tuple[int, ...]
+    size: int              # unpadded element count
+    padded: int            # padded to CHUNK
+    bucket: int            # bucket index
+    offset: int            # element offset within its bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    slots: Tuple[TensorSlot, ...]     # in packing order (reverse flatten)
+    bucket_sizes: Tuple[int, ...]     # elements per bucket (CHUNK-aligned)
+    treedef: Any
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def n_tensors(self) -> int:
+        return len(self.slots)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2
+              ) -> BucketPlan:
+    """Greedy fill: walk tensors in reverse order, open a new bucket whenever
+    the current one exceeds ``bucket_mb`` (the paper's "several megabytes")."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    target_elems = int(bucket_mb * 2 ** 20 / dtype_bytes)
+    slots: List[TensorSlot] = []
+    bucket_sizes: List[int] = []
+    cur, cur_off = 0, 0
+    for path, leaf in reversed(leaves):
+        shape = tuple(leaf.shape)
+        size = int(np.prod(shape)) if shape else 1
+        padded = -(-size // CHUNK) * CHUNK
+        if cur_off and cur_off + padded > target_elems:
+            bucket_sizes.append(cur_off)
+            cur, cur_off = cur + 1, 0
+        slots.append(TensorSlot(_path_str(path), shape, size, padded,
+                                cur, cur_off))
+        cur_off += padded
+    bucket_sizes.append(cur_off)
+    return BucketPlan(tuple(slots), tuple(bucket_sizes), treedef)
+
+
+def pack(tree, plan: BucketPlan, dtype=jnp.bfloat16) -> List[jax.Array]:
+    """Pytree -> list of flat per-bucket buffers (paper's allreduce payloads)."""
+    leaves = list(reversed(jax.tree_util.tree_leaves(tree)))
+    assert len(leaves) == plan.n_tensors
+    bufs = [[] for _ in plan.bucket_sizes]
+    for slot, leaf in zip(plan.slots, leaves):
+        flat = leaf.reshape(-1).astype(dtype)
+        if slot.padded != slot.size:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros(slot.padded - slot.size, dtype)])
+        bufs[slot.bucket].append(flat)
+    return [jnp.concatenate(b) for b in bufs]
+
+
+def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):
+    """Inverse of ``pack`` (buffers -> pytree in original structure)."""
+    leaves = []
+    for slot in plan.slots:
+        flat = jax.lax.dynamic_slice_in_dim(bufs[slot.bucket], slot.offset,
+                                            slot.padded)
+        leaves.append(flat[:slot.size].reshape(slot.shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(plan.treedef, list(reversed(leaves)))
+
+
+def segment_ids(plan: BucketPlan) -> np.ndarray:
+    """Per-CHUNK tensor index over the *concatenated* buckets — the
+    batched-norm kernel's segment map. Shape: (total_chunks,) int32."""
+    ids = []
+    for ti, slot in enumerate(plan.slots):
+        ids.extend([ti] * (slot.padded // CHUNK))
+    return np.asarray(ids, np.int32)
+
+
+def concat_buckets(bufs: List[jax.Array]) -> jax.Array:
+    return jnp.concatenate(bufs) if len(bufs) > 1 else bufs[0]

@@ -1,0 +1,42 @@
+"""Label-smoothed cross entropy (paper §III-A.2, after [11]/[7]).
+
+``smoothed_xent`` is the numerically-stable pure-jnp implementation (also
+the oracle for the Pallas kernel in ``repro.kernels``). Labels equal to
+``IGNORE`` are masked out (used for VLM image-prefix positions).
+
+Loss = (1-ε)·NLL(target) + ε·mean_v(NLL(v)), computed from logsumexp —
+works with vocab-sharded logits (the reductions lower to psum under GSPMD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1
+
+
+def smoothed_xent(logits, labels, *, smoothing: float = 0.1):
+    """logits: (..., V) f32; labels: (...) int32 (IGNORE = masked).
+    Returns (mean loss, n_valid)."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    mean_all = logits.mean(axis=-1)
+    nll = lse - ((1.0 - smoothing) * tgt + smoothing * mean_all)
+    n = jnp.maximum(valid.sum(), 1)
+    return jnp.where(valid, nll, 0.0).sum() / n, valid.sum()
+
+
+def smoothed_xent_onehot(logits, labels, *, smoothing: float = 0.1):
+    """One-hot classification variant (ResNet head): labels (B,) int32."""
+    return smoothed_xent(logits, labels, smoothing=smoothing)
+
+
+def top1_accuracy(logits, labels):
+    valid = labels != IGNORE
+    pred = jnp.argmax(logits, axis=-1)
+    hit = jnp.where(valid, pred == labels, False)
+    return hit.sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,132 @@
+"""Optimizers: momentum-SGD (the paper's base solver and comparison
+baseline) and LARS [You et al., arXiv:1708.03888] — the paper's §III-A.1
+layer-wise adaptive rate scaling.
+
+LARS per tensor w with gradient g:
+    trust = η · ||w|| / (||g|| + wd·||w|| + ε)
+    v    ← μ·v + lr·trust·(g + wd·w)
+    w    ← w − v
+1-D tensors (biases, norm scales) and the classifier head are excluded from
+trust scaling, as in the paper/MLPerf reference.
+
+Per-tensor norms are computed either the plain-jnp way or via the
+``batched_norm`` Pallas kernel (paper §III-B.2) over the bucket-packed
+buffer — selected with ``use_kernel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "lars"            # lars | sgdm | lamb
+    momentum: float = 0.9         # beta1 for lamb
+    beta2: float = 0.999          # lamb second-moment decay
+    weight_decay: float = 5e-5
+    trust_coef: float = 0.001     # η (lars); lamb uses ratio directly
+    eps: float = 1e-9
+    nesterov: bool = False
+    use_kernel: bool = False      # batched-norm Pallas kernel for the norms
+
+
+def init_momentum(params, kind: str = "lars"):
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+    if kind == "lamb":
+        # LAMB carries Adam's two moments; packed into one pytree so the
+        # TrainState shape is optimizer-agnostic
+        return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+    return zeros()
+
+
+def _is_scaled(p) -> bool:
+    """Trust-ratio scaling applies to >=2-D tensors only."""
+    return p.ndim >= 2
+
+
+def tensor_norms(tree):
+    """Per-tensor L2 norms, plain jnp (the per-layer baseline the paper's
+    batched kernel replaces)."""
+    return jax.tree.map(
+        lambda x: jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)))), tree)
+
+
+def _batched_norms(params, grads, cfg):
+    """All per-tensor norms in one pass (kernel or packed-jnp path)."""
+    if cfg.use_kernel:
+        from repro.kernels import ops
+        return (ops.tree_norms(params), ops.tree_norms(grads))
+    return tensor_norms(params), tensor_norms(grads)
+
+
+def update(params, grads, mom, lr, cfg: OptConfig):
+    """One optimizer step (all fp32; caller owns mixed-precision casts).
+    Returns (new_params, new_mom)."""
+    if cfg.kind == "sgdm":
+        def upd(p, g, v):
+            g = g.astype(jnp.float32) + cfg.weight_decay * p
+            v2 = cfg.momentum * v + lr * g
+            step = (cfg.momentum * v2 + lr * g) if cfg.nesterov else v2
+            return p - step, v2
+        out = jax.tree.map(upd, params, grads, mom)
+    elif cfg.kind == "lars":
+        wn, gn = _batched_norms(params, grads, cfg)
+
+        def upd(p, g, v, pw, gw):
+            g = g.astype(jnp.float32)
+            if _is_scaled(p):
+                trust = cfg.trust_coef * pw / (gw + cfg.weight_decay * pw
+                                               + cfg.eps)
+                trust = jnp.where(pw > 0, trust, 1.0)
+            else:
+                trust = 1.0
+            g = g + cfg.weight_decay * p
+            v2 = cfg.momentum * v + (lr * trust) * g
+            return p - v2, v2
+        out = jax.tree.map(upd, params, grads, mom, wn, gn)
+    elif cfg.kind == "lamb":
+        # You et al. 2020 (LAMB): Adam statistics + per-tensor trust ratio
+        # ||w|| / ||update||. The paper's LARS lineage, known to work
+        # better for the transformer pool (DESIGN.md §3).
+        t = mom["count"] + 1
+        b1, b2 = cfg.momentum, cfg.beta2
+
+        def moments(g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            return m2, v2
+
+        mv = jax.tree.map(moments, grads, mom["m"], mom["v"])
+        new_m = jax.tree.map(lambda x: x[0], mv,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda x: x[1], mv,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        c1 = 1 - b1 ** t.astype(jnp.float32)
+        c2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+            u = u + cfg.weight_decay * p
+            if _is_scaled(p):
+                wn = jnp.sqrt(jnp.sum(jnp.square(p)))
+                un = jnp.sqrt(jnp.sum(jnp.square(u)))
+                ratio = jnp.where((wn > 0) & (un > 0), wn / un, 1.0)
+            else:
+                ratio = 1.0
+            return p - lr * ratio * u
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, {"m": new_m, "v": new_v, "count": t}
+    else:
+        raise ValueError(cfg.kind)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_mom

@@ -1,0 +1,30 @@
+"""Mixed-precision policy (paper §IV): compute and communicate in half
+precision, keep master weights and the optimizer update in fp32.
+
+On TPU the half dtype is bf16 (no loss-scaling needed, unlike the paper's
+fp16 on V100 — documented hardware adaptation, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cast_to_compute(params, dtype=jnp.bfloat16):
+    """Cast fp32 parameter leaves to the compute dtype (fwd/bwd pass)."""
+    def f(x):
+        if isinstance(x, jax.Array) or hasattr(x, "dtype"):
+            if x.dtype == jnp.float32:
+                return x.astype(dtype)
+        return x
+    return jax.tree.map(f, params)
+
+
+def grads_to_comm(grads, dtype=jnp.bfloat16):
+    """Cast gradients to the communication dtype before all-reduce."""
+    return jax.tree.map(lambda g: g.astype(dtype), grads)
+
+
+def grads_to_master(grads):
+    """Upcast reduced gradients to fp32 for the optimizer update."""
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)

@@ -1,0 +1,59 @@
+"""Learning-rate control (paper §III-A.1): gradual warm-up [Goyal et al.]
+plus the decay-pattern family the paper searched over ("step, polynomial,
+linear, and so on — optimized decay patterns based on many trials").
+
+All schedules are pure functions of the step index (jit-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    base_lr: float = 0.1
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    decay: str = "poly2"          # const | step | linear | poly2 | cosine
+    # step-decay knobs (He et al. style /10 at milestones)
+    step_milestones: tuple = (0.5, 0.75, 0.9)
+    step_factor: float = 0.1
+    end_lr: float = 0.0001
+
+
+def make_schedule(cfg: ScheduleConfig) -> Callable:
+    """Returns lr(step) -> f32 scalar."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.maximum(cfg.warmup_steps, 1)
+        warm_lr = cfg.base_lr * (step + 1) / warm
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        if cfg.decay == "const":
+            dec = cfg.base_lr
+        elif cfg.decay == "linear":
+            dec = cfg.base_lr * (1 - t) + cfg.end_lr * t
+        elif cfg.decay == "poly2":
+            # the paper's best-found family: polynomial of power 2
+            dec = (cfg.base_lr - cfg.end_lr) * (1 - t) ** 2 + cfg.end_lr
+        elif cfg.decay == "cosine":
+            dec = (cfg.end_lr + (cfg.base_lr - cfg.end_lr)
+                   * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        elif cfg.decay == "step":
+            f = jnp.ones(())
+            for ms in cfg.step_milestones:
+                f = jnp.where(t >= ms, f * cfg.step_factor, f)
+            dec = cfg.base_lr * f
+        else:
+            raise ValueError(cfg.decay)
+        return jnp.where(step < cfg.warmup_steps, warm_lr, dec)
+    return lr
+
+
+def linear_scaled_lr(base_lr_256: float, global_batch: int) -> float:
+    """Goyal et al. linear scaling rule: lr = base * batch/256."""
+    return base_lr_256 * global_batch / 256.0

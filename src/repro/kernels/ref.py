@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import CHUNK
+
+
+def batched_sumsq(flat, seg_ids, n_tensors: int):
+    """flat: (n_chunks*CHUNK,) ; seg_ids: (n_chunks,) int32.
+    Returns (n_tensors,) f32 sum of squares per segment."""
+    x = flat.reshape(-1, CHUNK).astype(jnp.float32)
+    per_chunk = jnp.sum(x * x, axis=-1)
+    return jax.ops.segment_sum(per_chunk, seg_ids, num_segments=n_tensors)
+
+
+def lars_packed_update(p, g, m, trust, seg_ids, *, lr, momentum, wd):
+    """Flat packed LARS step. p/g/m: (n_chunks*CHUNK,) f32;
+    trust: (n_tensors,) f32; returns (new_p, new_m)."""
+    t = trust[seg_ids]                              # (n_chunks,)
+    t = jnp.repeat(t, CHUNK)
+    g = g.astype(jnp.float32) + wd * p
+    m2 = momentum * m + (lr * t) * g
+    return p - m2, m2
+
+
+def smoothed_xent_rows(logits, labels, *, smoothing: float):
+    """Row-wise smoothed NLL (no masking/averaging — the kernel computes the
+    per-row loss; reduction happens outside). logits (T,V), labels (T,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    mean_all = logits.mean(axis=-1)
+    return lse - ((1.0 - smoothing) * tgt + smoothing * mean_all)

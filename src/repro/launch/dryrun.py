@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture × input shape) and for both production meshes
+(single-pod 16×16 and multi-pod 2×16×16), jit-lower the corresponding step
+function with explicit in_shardings, ``.compile()`` it, and extract:
+  * memory_analysis()  — proves the working set fits,
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * the partitioned HLO's collective result bytes (roofline.py).
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` and are
+aggregated into EXPERIMENTS.md by ``python -m repro.launch.report``.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, get_config, param_count, \
+    active_param_count, shapes_for
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import fit_shardings, input_specs
+from repro.serve.decode import make_prefill_step, make_serve_step
+from repro.train.step import make_train_step
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_step(si, mesh):
+    model, cfg, shape = si["model"], si["cfg"], si["shape"]
+    if si["kind"] == "train":
+        sched = make_schedule(ScheduleConfig(
+            base_lr=0.1, warmup_steps=100, total_steps=1000, decay="poly2"))
+        return make_train_step(model, lars.OptConfig(kind="lars"), sched,
+                               mesh=mesh, comm="xla")
+    if si["kind"] == "prefill":
+        return make_prefill_step(model, cache_len=shape.seq_len, mesh=mesh)
+    step = make_serve_step(model, mesh=mesh)
+    return step
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    si = input_specs(arch, shape_name, mesh)
+    fn = build_step(si, mesh)
+    fitted = fit_shardings(mesh, si["args"], si["shardings"])
+    shardings = to_shardings(mesh, fitted)
+    t0 = time.time()
+    # decode donates its cache (serving loops update in place)
+    donate = (1,) if si["kind"] == "decode" else ()
+    lowered = jax.jit(fn, in_shardings=shardings,
+                      donate_argnums=donate).lower(*si["args"])
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    r = rl.analyze(compiled)
+    cfg = si["cfg"]
+    n_total = param_count(cfg)
+    n_active = active_param_count(cfg)
+    mf = rl.model_flops(cfg, si["shape"], n_total, n_active)
+    chips = mesh.devices.size
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = int(getattr(ma, f, 0))
+    except Exception:
+        pass
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": si["kind"],
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "flops_per_dev": r.flops, "hbm_bytes_per_dev": r.hbm_bytes,
+        "coll_bytes_per_dev": r.coll_bytes, "coll_by_kind": r.coll_by_kind,
+        "memory_analysis": mem,
+        "t_compute_s": r.t_compute, "t_memory_s": r.t_memory,
+        "t_collective_s": r.t_collective, "dominant": r.dominant,
+        "xla_raw": r.xla_raw,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (r.flops * chips)) if r.flops else 0.0,
+        "params_total": n_total, "params_active": n_active,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="baseline",
+                    help="experiment tag (baseline / perf-iteration name)")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    outdir = os.path.join(args.out, args.tag)
+    os.makedirs(outdir, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (shapes_for(cfg) if args.shape == "all"
+                  else {s: None for s in args.shape.split(",")})
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_tag = "2x16x16" if multi else "16x16"
+                path = os.path.join(
+                    outdir, f"{arch}__{shape_name}__{mesh_tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    n_skip += 1
+                    continue
+                try:
+                    rec = dryrun_one(arch, shape_name, multi)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"OK   {arch:18s} {shape_name:12s} {mesh_tag:8s} "
+                          f"compile={rec['compile_s']:7.1f}s "
+                          f"dom={rec['dominant']:10s} "
+                          f"t=({rec['t_compute_s']:.3e},"
+                          f"{rec['t_memory_s']:.3e},"
+                          f"{rec['t_collective_s']:.3e})s", flush=True)
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    print(f"FAIL {arch:18s} {shape_name:12s} {mesh_tag:8s} "
+                          f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+    print(f"done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,394 @@
+"""Structural cost analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — useless for
+scan-over-layers models (verified: an 8-step scanned matmul reports 1/8 the
+FLOPs of its unrolled twin). This walker parses the HLO module, computes
+per-computation costs bottom-up, and multiplies while bodies by their
+``known_trip_count`` backend config (present after XLA optimization).
+
+Counted per instruction:
+  flops  — dot (2·|result|·|contracted|), convolution
+           (2·|result|·kernel_spatial·Cin/groups). Elementwise flops are
+           ignored (matmul-dominated workloads; documented approximation).
+  bytes  — operands + result of top-level instructions (fusions at their
+           call boundary only: internal traffic stays in VMEM/registers).
+  coll   — result bytes of all-gather / all-reduce / reduce-scatter /
+           all-to-all / collective-permute, by kind.
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * conditional branches contribute the max over branches;
+  * ring-factor (n-1)/n on collectives is not applied;
+  * elementwise/transcendental flops ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s+\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(s: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(s):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {}
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n,
+                    {k: v * n for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result: str          # result type string
+    op: str
+    line: str
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[_Instr]] = {}
+        self.entry: Optional[str] = None
+        self.result_of: Dict[str, str] = {}      # instr name -> result type
+        self._instr_index: Dict[str, _Instr] = {}
+        self._parse(text)
+        self._cost_cache: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line or line.startswith("//"):
+                continue
+            hdr = _COMP_HDR.match(line)
+            if hdr and line.endswith("{"):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.startswith("}"):
+                continue
+            m = _INSTR.match(line)
+            if m and cur is not None:
+                ins = _Instr(m.group(1), m.group(2), m.group(3), line)
+                self.comps[cur].append(ins)
+                self.result_of[ins.name] = ins.result
+                self._instr_index[ins.name] = ins
+
+    # -- shape helpers ----------------------------------------------------
+    def _operands(self, line: str) -> List[str]:
+        # operand names inside the (...) call of the op
+        inner = line[line.index("("):]
+        return re.findall(r"%([\w\.\-_]+)", inner)
+
+    def _operand_shapes(self, line: str) -> List[str]:
+        names = self._operands(line)
+        return [self.result_of[n] for n in names if n in self.result_of]
+
+    def _called(self, line: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-_]+)", line)
+        return m.group(1) if m else None
+
+    _PASS_OPS = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def _is_cast_fusion(self, name: str) -> bool:
+        """Fusion computations that only move/convert data — CPU-backend
+        bf16-legalization artifacts that TPU fuses into consumers."""
+        comp = self.comps.get(name)
+        if not comp:
+            return False
+        return all(i.op in self._PASS_OPS + ("parameter", "constant")
+                   for i in comp)
+
+    def _producer(self, name: str) -> Optional[_Instr]:
+        for comp in self.comps.values():
+            for i in comp:
+                if i.name == name:
+                    return i
+        return None
+
+    def _trace_origin(self, name: str, depth: int = 0) -> str:
+        """Follow convert/copy chains (and cast-like fusions) upstream to
+        the original tensor, so operand bytes reflect the true dtype."""
+        if depth > 6 or name not in self._instr_index:
+            return name
+        ins = self._instr_index[name]
+        if ins.op in self._PASS_OPS:
+            ops = self._operands(ins.line)
+            if ops:
+                return self._trace_origin(ops[0], depth + 1)
+        if ins.op == "fusion":
+            callee = self._called(ins.line, "calls")
+            if callee and self._is_cast_fusion(callee):
+                ops = self._operands(ins.line)
+                if ops:
+                    return self._trace_origin(ops[0], depth + 1)
+        return name
+
+    def _traced_operand_shapes(self, line: str) -> List[str]:
+        out = []
+        for n in self._operands(line):
+            o = self._trace_origin(n)
+            if o in self.result_of:
+                out.append(self.result_of[o])
+            elif n in self.result_of:
+                out.append(self.result_of[n])
+        return out
+
+    # -- cost -------------------------------------------------------------
+    def _dot_flops(self, ins: _Instr) -> float:
+        res = _parse_shapes(ins.result)
+        if not res:
+            return 0.0
+        out_elems = _prod(res[0][1])
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+        ops = self._operand_shapes(ins.line)
+        if not m or not ops:
+            return 2.0 * out_elems  # fallback
+        lhs = _parse_shapes(ops[0])
+        if not lhs:
+            return 2.0 * out_elems
+        cdims = [int(d) for d in m.group(1).split(",") if d]
+        contract = _prod([lhs[0][1][d] for d in cdims]) if cdims else 1
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, ins: _Instr) -> float:
+        res = _parse_shapes(ins.result)
+        if not res:
+            return 0.0
+        out_elems = _prod(res[0][1])
+        ops = self._operand_shapes(ins.line)
+        if len(ops) < 2:
+            return 2.0 * out_elems
+        kshape = _parse_shapes(ops[1])
+        if not kshape:
+            return 2.0 * out_elems
+        kdims = kshape[0][1]
+        m = re.search(r"dim_labels=\S*?_([\dio]+)->", ins.line)
+        # kernel elems / output-feature count = spatial * cin / groups
+        cout = None
+        if m:
+            lab = m.group(1)
+            if "o" in lab:
+                cout = kdims[lab.index("o")]
+        k_elems = _prod(kdims)
+        per_out = k_elems // cout if cout else k_elems
+        g = re.search(r"feature_group_count=(\d+)", ins.line)
+        groups = int(g.group(1)) if g else 1
+        return 2.0 * out_elems * per_out / groups
+
+    _SLICE_OPS = ("dynamic-slice", "dynamic-update-slice", "slice", "gather")
+
+    def _fusion_bytes(self, callee: str, ins: _Instr) -> float:
+        """HBM traffic at a fusion boundary, slice-aware: a parameter that is
+        only ever sliced inside the fusion contributes slice-sized traffic,
+        not its (possibly scan-carried, very large) full size; a fusion whose
+        root is dynamic-update-slice writes only the updated region."""
+        comp = self.comps.get(callee, [])
+        total = 0.0
+
+        def terminal_users(name, depth=0):
+            """[(terminal_instr, via_operand_name)] through cast chains."""
+            out = []
+            for u in comp:
+                if u.op == "parameter" or name not in self._operands(u.line):
+                    continue
+                if u.op in self._PASS_OPS and depth < 6:
+                    deeper = terminal_users(u.name, depth + 1)
+                    out.extend(deeper if deeper else [(u, name)])
+                else:
+                    out.append((u, name))
+            return out
+
+        def update_bytes(dus_line):
+            upd = self._traced_operand_shapes(dus_line)
+            return _shape_bytes(upd[1]) if len(upd) > 1 else 0
+
+        for p in comp:
+            if p.op != "parameter":
+                continue
+            users = terminal_users(p.name)
+            if users and all(u.op in self._SLICE_OPS for u, _ in users):
+                for u, via in users:
+                    ops_u = self._operands(u.line)
+                    if u.op == "dynamic-update-slice":
+                        if ops_u and ops_u[0] == via:     # sliced buffer
+                            total += update_bytes(u.line)
+                        else:                             # p IS the update
+                            total += _shape_bytes(p.result)
+                    else:
+                        total += _shape_bytes(u.result)
+            else:
+                total += _shape_bytes(p.result)
+        root = next((i for i in reversed(comp) if "ROOT" in i.line), None)
+        if root is not None:
+            origin = root
+            seen = 0
+            while origin.op in self._PASS_OPS and seen < 6:
+                ops_r = self._operands(origin.line)
+                nxt = next((i for i in comp if i.name == (ops_r[0] if ops_r
+                                                          else "")), None)
+                if nxt is None:
+                    break
+                origin, seen = nxt, seen + 1
+            if origin.op == "dynamic-update-slice":
+                total += update_bytes(origin.line)
+            else:
+                total += _shape_bytes(ins.result)
+        else:
+            total += _shape_bytes(ins.result)
+        return total
+
+    def comp_cost(self, name: str, in_loop: bool = False) -> Cost:
+        key = (name, in_loop)
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        total = Cost()
+        for ins in self.comps.get(name, []):
+            op = ins.op
+            if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all"):
+                continue
+            if in_loop and op in ("copy", "convert", "transpose", "reshape"):
+                # inside while bodies these are CPU-backend lowering
+                # artifacts (double-buffer copies where TPU aliases donated
+                # buffers; dtype casts TPU fuses into the consuming matmul)
+                continue
+            if op == "while":
+                body = self._called(ins.line, "body")
+                cond = self._called(ins.line, "condition")
+                trip = 1
+                t = _TRIP.search(ins.line)
+                if t:
+                    trip = int(t.group(1))
+                inner = Cost()
+                if body:
+                    inner += self.comp_cost(body, in_loop=True)
+                if cond:
+                    inner += self.comp_cost(cond, in_loop=True)
+                total += inner.scaled(trip)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      ins.line)
+                names = (re.findall(r"%?([\w\.\-_]+)", branches[0])
+                         if branches else [])
+                tc = self._called(ins.line, "true_computation")
+                fc = self._called(ins.line, "false_computation")
+                names += [n for n in (tc, fc) if n]
+                if names:
+                    costs = [self.comp_cost(n, in_loop) for n in names]
+                    best = max(costs, key=lambda c: c.flops + c.bytes)
+                    total += best
+                continue
+            if op in ("call", "async-start"):
+                callee = self._called(ins.line, "to_apply") \
+                    or self._called(ins.line, "called_computations?")
+                if callee:
+                    total += self.comp_cost(callee, in_loop)
+                continue
+
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads/writes only the slice, not the source buffer
+                io_bytes = 2 * _shape_bytes(ins.result)
+            elif op in ("dynamic-update-slice", "scatter"):
+                ops_sh = self._operand_shapes(ins.line)
+                upd = _shape_bytes(ops_sh[1]) if len(ops_sh) > 1 \
+                    else _shape_bytes(ins.result)
+                io_bytes = 2 * upd   # read update + write the touched region
+            else:
+                io_bytes = _shape_bytes(ins.result) + sum(
+                    _shape_bytes(s)
+                    for s in self._traced_operand_shapes(ins.line))
+            c = Cost(bytes=io_bytes)
+            if op == "fusion":
+                callee = self._called(ins.line, "calls")
+                if callee and self._is_cast_fusion(callee):
+                    continue          # pure dtype/layout shuffling: free
+                if callee:
+                    inner = self.comp_cost(callee, in_loop)
+                    c.flops += inner.flops      # dots inside fusions count
+                    for k, v in inner.coll.items():
+                        c.coll[k] = c.coll.get(k, 0.0) + v
+                    c.bytes = self._fusion_bytes(callee, ins)
+            elif op in ("dot", "dot-general"):
+                c.flops = self._dot_flops(ins)
+            elif op == "convolution":
+                c.flops = self._conv_flops(ins)
+            else:
+                base = op.replace("-start", "").replace("-done", "")
+                if base in COLLECTIVES and not op.endswith("-done"):
+                    c.coll[base] = c.coll.get(base, 0.0) \
+                        + _shape_bytes(ins.result)
+            total += c
+        self._cost_cache[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None
+        # entry computations' fusions/dots are reachable from ENTRY only
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(text: str) -> Cost:
+    return HloModule(text).entry_cost()

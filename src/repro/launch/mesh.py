@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Axes: ``data`` — pure data parallelism (the paper's axis: gradient
+all-reduce), ``model`` — tensor/expert parallelism within a pod,
+``pod`` — the cross-pod data-parallel axis of the 2-pod production job.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0, (n, model_parallel)
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: top instructions by HBM bytes / FLOPs / collective
+bytes in the compiled per-device module (scan trip counts applied). The
+'profile' the §Perf hypothesis loop reads, since there is no real TPU.
+
+  PYTHONPATH=src python -m repro.launch.profile_hlo --arch deepseek-v2-236b \
+      --shape train_4k [--multi-pod] [--top 15]
+"""
+import argparse
+from collections import Counter
+
+import jax
+
+from repro.launch import hlo_cost
+from repro.launch.dryrun import build_step, to_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import fit_shardings, input_specs
+
+
+def profile(arch, shape, multi_pod=False, top=15):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    si = input_specs(arch, shape, mesh)
+    fn = build_step(si, mesh)
+    fitted = fit_shardings(mesh, si["args"], si["shardings"])
+    donate = (1,) if si["kind"] == "decode" else ()
+    compiled = jax.jit(fn, in_shardings=to_shardings(mesh, fitted),
+                       donate_argnums=donate).lower(*si["args"]).compile()
+    mod = hlo_cost.HloModule(compiled.as_text())
+    by_bytes, by_flops, by_coll = Counter(), Counter(), Counter()
+
+    def meta(ins):
+        import re
+        m = re.search(r'op_name="([^"]+)"', ins.line)
+        return (m.group(1)[-90:] if m else ins.name[:60])
+
+    def walk(comp, mult, prefix=""):
+        for ins in mod.comps.get(comp, []):
+            if ins.op in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast", "after-all"):
+                continue
+            if prefix and ins.op in ("copy", "convert", "transpose",
+                                     "reshape"):
+                continue
+            if ins.op == "while":
+                body = mod._called(ins.line, "body")
+                t = hlo_cost._TRIP.search(ins.line)
+                trip = int(t.group(1)) if t else 1
+                walk(body, mult * trip, prefix + "W/")
+                continue
+            key = prefix + ins.op + " " + meta(ins)
+            if ins.op == "fusion":
+                callee = mod._called(ins.line, "calls")
+                if callee and mod._is_cast_fusion(callee):
+                    continue
+                inner = mod.comp_cost(callee, in_loop=bool(prefix))
+                by_bytes[key] += mod._fusion_bytes(callee, ins) * mult
+                by_flops[key] += inner.flops * mult
+                for k, v in inner.coll.items():
+                    by_coll[prefix + k + " " + meta(ins)] += v * mult
+                continue
+            if ins.op in ("dynamic-slice", "slice", "gather"):
+                b = 2 * hlo_cost._shape_bytes(ins.result)
+            elif ins.op in ("dynamic-update-slice", "scatter"):
+                sh = mod._operand_shapes(ins.line)
+                b = 2 * (hlo_cost._shape_bytes(sh[1]) if len(sh) > 1
+                         else hlo_cost._shape_bytes(ins.result))
+            else:
+                b = hlo_cost._shape_bytes(ins.result) + sum(
+                    hlo_cost._shape_bytes(s)
+                    for s in mod._traced_operand_shapes(ins.line))
+            by_bytes[key] += b * mult
+            if ins.op in ("dot", "dot-general"):
+                by_flops[key] += mod._dot_flops(ins) * mult
+            if ins.op == "convolution":
+                by_flops[key] += mod._conv_flops(ins) * mult
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in hlo_cost.COLLECTIVES and not ins.op.endswith("-done"):
+                by_coll[key] += hlo_cost._shape_bytes(ins.result) * mult
+
+    walk(mod.entry, 1)
+    print(f"=== {arch} x {shape} x "
+          f"{'2x16x16' if multi_pod else '16x16'} ===")
+    for title, ctr, scale, unit in [
+            ("TOP HBM BYTES", by_bytes, 1e9, "GB"),
+            ("TOP FLOPS", by_flops, 1e12, "TF"),
+            ("TOP COLLECTIVE BYTES", by_coll, 1e9, "GB")]:
+        print(f"\n--- {title} (total "
+              f"{sum(ctr.values())/scale:.2f}{unit}) ---")
+        for k, v in ctr.most_common(top):
+            print(f"{v/scale:10.3f}{unit}  {k}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.multi_pod, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input of
+every (architecture × input-shape) combination, plus their PartitionSpecs.
+Weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, InputShape
+from repro.core import pinit
+from repro.models.common import dp_axes
+from repro.models.registry import Model, build_model
+from repro.train.state import abstract_state, state_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fit_spec(spec, shape: Tuple[int, ...], mesh) -> "P":
+    """jit rejects INPUT shardings whose dim is not divisible by the axis
+    size (e.g. 40 q-heads / 16-way model axis, vocab 51865, batch 1 at
+    long_500k). Fit the preferred spec to the shape: an axis that does not
+    divide its dim is moved to the largest other unsharded dim it divides
+    (KV-head -> sequence, vocab -> d_model, ...), else dropped
+    (replicated). DESIGN.md §5 documents this baseline policy."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axes_of(e):
+        if e is None:
+            return ()
+        return e if isinstance(e, tuple) else (e,)
+
+    def prod(axs):
+        n = 1
+        for a in axs:
+            n *= sizes[a]
+        return n
+
+    out = [axes_of(e) for e in entries]
+    homeless = []
+    for d in range(len(shape)):
+        keep = []
+        size_needed = 1
+        for a in out[d]:
+            if shape[d] % (size_needed * sizes[a]) == 0:
+                keep.append(a)
+                size_needed *= sizes[a]
+            else:
+                homeless.append(a)
+        out[d] = keep
+    for a in homeless:
+        cands = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for d in cands:
+            cur = prod(out[d])
+            if shape[d] % (cur * sizes[a]) == 0 and shape[d] >= sizes[a]:
+                out[d] = out[d] + [a]
+                break
+        # else: replicate (axis dropped entirely)
+    norm = [tuple(e) if len(e) > 1 else (e[0] if e else None) for e in out]
+    while norm and norm[-1] is None:
+        norm.pop()
+    return P(*norm)
+
+
+def fit_shardings(mesh, args_tree, spec_tree):
+    """Apply fit_spec leafwise over matching (abstract args, specs) trees."""
+    return jax.tree.map(lambda a, s: fit_spec(s, a.shape, mesh),
+                        args_tree, spec_tree)
+
+
+def batch_specs(cfg, shape: InputShape, mesh) -> Tuple[Dict, Dict]:
+    """(abstract batch, partition specs) for one input shape."""
+    dp = dp_axes(mesh)
+    B = shape.global_batch
+    if cfg.family == "conv":
+        ab = {"images": _sds((B, cfg.image_size, cfg.image_size, 3),
+                             jnp.float32),
+              "labels": _sds((B,), jnp.int32)}
+        sp = {"images": P(dp, None, None, None), "labels": P(dp)}
+        return ab, sp
+
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        S = S - cfg.encoder.n_frames     # patch prefix counts toward seq_len
+    if shape.kind == "decode":
+        ab = {"tokens": _sds((B, 1), jnp.int32)}
+        sp = {"tokens": P(dp, None)}
+        return ab, sp
+    ab = {"tokens": _sds((B, S), jnp.int32)}
+    sp = {"tokens": P(dp, None)}
+    if shape.kind == "train":
+        ab["labels"] = _sds((B, S), jnp.int32)
+        sp["labels"] = P(dp, None)
+    if cfg.family in ("vlm", "audio"):
+        ab["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model),
+                            jnp.float32)
+        sp["frames"] = P(dp, None, None)
+    return ab, sp
+
+
+def input_specs(arch: str, shape_name: str, mesh, model: Model = None):
+    """Everything the dry-run needs to lower one (arch × shape):
+
+    returns dict with keys
+      kind      : train | prefill | decode
+      model     : the built Model
+      args      : tuple of abstract inputs for the step function
+      shardings : matching tuple of PartitionSpec pytrees
+      out_spec  : function of the step outputs (or None -> auto)
+    """
+    cfg = get_config(arch)
+    model = model or build_model(cfg)
+    shape = SHAPES[shape_name]
+    ab, sp = batch_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        st = abstract_state(model)
+        st_spec = state_specs(model)
+        return dict(kind="train", model=model, cfg=cfg,
+                    args=(st, ab), shardings=(st_spec, sp), shape=shape)
+
+    # serving holds bf16 weights (fp32 masters are a train-state concept)
+    params = pinit.abstract_compute(model.param_pd)
+    p_spec = pinit.specs(model.param_pd)
+    if shape.kind == "prefill":
+        return dict(kind="prefill", model=model, cfg=cfg,
+                    args=(params, ab), shardings=(p_spec, sp), shape=shape)
+
+    # decode: one token against a seq_len cache (batch over all dp axes)
+    cpd = model.cache_pd(shape.global_batch, shape.seq_len, dp_axes(mesh))
+    cache = pinit.abstract(cpd)
+    c_spec = pinit.specs(cpd)
+    pos = _sds((), jnp.int32)
+    return dict(kind="decode", model=model, cfg=cfg,
+                args=(params, cache, ab["tokens"], pos),
+                shardings=(p_spec, c_spec, sp["tokens"], P()), shape=shape)

@@ -1,0 +1,95 @@
+"""Training launcher.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \\
+      --reduced --seq 128 --batch 8 --steps 100 --optimizer lars --lr 1.0
+  PYTHONPATH=src python -m repro.launch.train --arch resnet50 --reduced \\
+      --batch 32 --steps 200 --comm bucketed --warmup 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, linear_scaled_lr, \
+    make_schedule
+from repro.data.synthetic import make_batch_fn
+from repro.launch.mesh import make_local_mesh
+from repro.models.registry import build_model
+from repro.train import loop
+from repro.train.state import init_state
+from repro.train.step import make_eval_step, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-sized variant of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--optimizer", default="lars",
+                choices=["lars", "sgdm", "lamb"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--comm", default="xla",
+                    choices=["xla", "naive", "bucketed"])
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default: linear-scaling rule from batch size")
+    ap.add_argument("--warmup", type=int, default=None)
+    ap.add_argument("--decay", default="poly2")
+    ap.add_argument("--smoothing", type=float, default=0.1)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=5e-5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--data", default="lcg", choices=["lcg", "uniform"])
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh(args.model_parallel)
+    model = build_model(cfg)
+
+    lr = args.lr if args.lr is not None else linear_scaled_lr(0.1, args.batch)
+    warmup = args.warmup if args.warmup is not None else args.steps // 10
+    sched = make_schedule(ScheduleConfig(
+        base_lr=lr, warmup_steps=warmup, total_steps=args.steps,
+        decay=args.decay))
+    opt = lars.OptConfig(kind=args.optimizer, momentum=args.momentum,
+                         weight_decay=args.weight_decay)
+
+    shape = InputShape("cli", "train", args.seq, args.batch)
+    batch_fn = make_batch_fn(cfg, shape, seed=args.seed, kind=args.data,
+                             mesh=mesh)
+    train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
+                                 mesh=mesh, comm=args.comm,
+                                 bucket_mb=args.bucket_mb,
+                                 grad_accum=args.grad_accum)
+    eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
+
+    state = init_state(model, args.seed, mesh,
+                       opt_kind=args.optimizer)
+    state, history = loop.train(
+        state, train_step, batch_fn, steps=args.steps, eval_step=eval_step,
+        eval_batch_fn=batch_fn, eval_every=args.eval_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed)
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
+if __name__ == "__main__":
+    main()

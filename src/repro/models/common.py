@@ -1,0 +1,101 @@
+"""Shared model building blocks.
+
+Parameters are described *abstractly* first (``PD`` descriptors carrying
+shape/dtype/PartitionSpec/initializer) and materialized by
+``repro.core.pinit`` — this is what makes the paper's §III-B.1
+broadcast-free parallel initialization possible: every process derives the
+same per-leaf key from the tree path and a shared seed, and ``jit`` with
+sharded ``out_shardings`` materializes only the local shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PD:
+    """Abstract parameter descriptor (a pytree leaf)."""
+    shape: Tuple[int, ...]
+    spec: Any = P()                  # PartitionSpec
+    init: str = "normal"             # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+def pd_stack(tree, n: int):
+    """Add a leading layer dim of size n to every descriptor (for scanned
+    layer stacks); the leading dim is unsharded."""
+    def f(pd):
+        return dataclasses.replace(pd, shape=(n, *pd.shape),
+                                   spec=P(None, *pd.spec))
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, PD))
+
+
+def dense_pd(d_in: int, d_out: int, *, spec=P(), scale: Optional[float] = None,
+             dtype=jnp.float32) -> PD:
+    if scale is None:
+        scale = d_in ** -0.5
+    return PD((d_in, d_out), spec=spec, init="normal", scale=scale, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def dp_axes(mesh) -> tuple:
+    """All mesh axes that carry the batch (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def constrain(x, mesh, spec):
+    from jax.sharding import NamedSharding
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def causal_mask_block(qpos, kpos, window: int = 0):
+    """(Q, K) boolean mask (True = attend) for absolute positions."""
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m

@@ -1,0 +1,198 @@
+"""Mamba2 block: chunked SSD parallel form for train/prefill, recurrent
+state update for decode.  Heads are sharded over the ``model`` mesh axis via
+the parameter PartitionSpecs (B/C projections are small and replicated).
+
+Parallel form follows the SSD "chunked" algorithm (Dao & Gu, 2024):
+intra-chunk quadratic attention-like term + inter-chunk recurrent state scan
+over chunk boundaries — all decays computed in log space and bounded by 1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PD, dense_pd, rms_norm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return di, nh, s.head_dim, s.d_state
+
+
+def mamba_pd(cfg):
+    d = cfg.d_model
+    di, nh, hd, ds = _dims(cfg)
+    s = cfg.ssm
+    dp = "data" if cfg.fsdp else None
+    return {
+        "in_x": dense_pd(d, di, spec=P(dp, "model")),
+        "in_z": dense_pd(d, di, spec=P(dp, "model")),
+        "in_B": dense_pd(d, ds, spec=P(dp, None)),
+        "in_C": dense_pd(d, ds, spec=P(dp, None)),
+        "in_dt": dense_pd(d, nh, spec=P(dp, "model")),
+        "dt_bias": PD((nh,), spec=P("model"), init="zeros"),
+        "A_log": PD((nh,), spec=P("model"), init="ones"),
+        "D": PD((nh,), spec=P("model"), init="ones"),
+        "conv_x": PD((s.d_conv, di), spec=P(None, "model"), scale=0.1),
+        "conv_B": PD((s.d_conv, ds), scale=0.1),
+        "conv_C": PD((s.d_conv, ds), scale=0.1),
+        "norm": PD((di,), spec=P("model"), init="ones"),
+        "out": dense_pd(di, d, spec=P("model", dp),
+                        scale=di ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out
+
+
+def mamba_parallel(p, x, cfg, *, return_cache: bool = False):
+    """x: (B,S,d) -> (B,S,d). S must be a multiple of cfg.ssm.chunk."""
+    di, nh, hd, ds = _dims(cfg)
+    cl = cfg.ssm.chunk
+    B, S, d = x.shape
+    if S % cl:
+        if return_cache:
+            # padding corrupts the final recurrent state (decay on fake
+            # steps); use the largest divisor chunk instead (exact)
+            c = min(cl, S)
+            while S % c:
+                c -= 1
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=c))
+            return mamba_parallel(p, x, cfg, return_cache=True)
+        x = jnp.pad(x, ((0, 0), (0, (-S) % cl), (0, 0)))
+        out, _ = mamba_parallel(p, x, cfg)
+        return out[:, :S], None
+    nc = S // cl
+
+    xin = _causal_conv(x @ p["in_x"], p["conv_x"])
+    xin = jax.nn.silu(xin)
+    Bm = jax.nn.silu(_causal_conv(x @ p["in_B"], p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(x @ p["in_C"], p["conv_C"]))
+    z = x @ p["in_z"]
+    dt = jax.nn.softplus((x @ p["in_dt"]) + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (nh,) negative
+
+    xh = xin.reshape(B, nc, cl, nh, hd).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, cl, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, cl, ds).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, cl, nh)
+    dA = dtc * A                                           # (B,nc,cl,nh) <=0
+    seg = jnp.cumsum(dA, axis=2)                           # within-chunk
+
+    # intra-chunk (quadratic within cl):
+    # Y[i] += sum_{j<=i} C_i·B_j * exp(seg_i - seg_j) * dt_j * x_j
+    CB = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)
+    # clamp before exp: masked (i<j) entries would otherwise overflow
+    decay = jnp.exp(jnp.minimum(
+        seg[:, :, :, None, :] - seg[:, :, None, :, :], 0.0))  # (B,nc,i,j,nh)
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    M = jnp.where(mask[None, None, :, :, None],
+                  CB[..., None] * decay * dtc[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bcijn,bcjnp->bcinp", M, xh)
+
+    # chunk-final states: (B,nc,nh,hd,ds)
+    state_decay = jnp.exp(seg[:, :, -1:, :] - seg)         # (B,nc,cl,nh)
+    states = jnp.einsum("bcjn,bcjs,bcjnp->bcnps",
+                        state_decay * dtc, Bc, xh)
+
+    # inter-chunk recurrence over chunk boundaries
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                # (B,nc,nh)
+
+    def scan_body(h, xs):
+        st, cd = xs                                        # (B,nh,hd,ds), (B,nh)
+        h_out = h
+        h = h * cd[..., None, None] + st
+        return h, h_out
+
+    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # (B,nc,nh,hd,ds)
+
+    y_inter = jnp.einsum("bcis,bcin,bcnps->bcinp",
+                         Cc, jnp.exp(seg), h_prev)
+    y = (y_intra + y_inter + p["D"].astype(jnp.float32)[:, None] * xh)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out"]
+    if not return_cache:
+        return out, None
+    W = cfg.ssm.d_conv
+    cache = {
+        "conv_x": jax.lax.dynamic_slice_in_dim(
+            (x @ p["in_x"]), S - (W - 1), W - 1, axis=1),
+        "conv_B": jax.lax.dynamic_slice_in_dim(
+            (x @ p["in_B"]), S - (W - 1), W - 1, axis=1),
+        "conv_C": jax.lax.dynamic_slice_in_dim(
+            (x @ p["in_C"]), S - (W - 1), W - 1, axis=1),
+        "state": h_last,                                   # (B,nh,hd,ds) f32
+    }
+    return out, cache
+
+
+def mamba_decode(p, x, cfg, cache):
+    """One-step recurrence. x: (B,1,d)."""
+    di, nh, hd, ds = _dims(cfg)
+    B = x.shape[0]
+    W = cfg.ssm.d_conv
+
+    def conv_step(raw_new, buf, w):
+        # buf: (B, W-1, C) previous raw inputs; returns (y, new_buf)
+        window = jnp.concatenate([buf, raw_new], axis=1)   # (B,W,C)
+        y = jnp.einsum("bwc,wc->bc", window, w)[:, None]
+        return y, window[:, 1:]
+
+    xr = x @ p["in_x"]
+    br = x @ p["in_B"]
+    cr = x @ p["in_C"]
+    xin, conv_x = conv_step(xr, cache["conv_x"], p["conv_x"])
+    Bm, conv_B = conv_step(br, cache["conv_B"], p["conv_B"])
+    Cm, conv_C = conv_step(cr, cache["conv_C"], p["conv_C"])
+    xin = jax.nn.silu(xin)
+    Bm = jax.nn.silu(Bm).astype(jnp.float32)[:, 0]         # (B,ds)
+    Cm = jax.nn.silu(Cm).astype(jnp.float32)[:, 0]
+    z = x @ p["in_z"]
+    dt = jax.nn.softplus((x @ p["in_dt"]) + p["dt_bias"]
+                         ).astype(jnp.float32)[:, 0]        # (B,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, nh, hd).astype(jnp.float32)
+
+    h = cache["state"]                                     # (B,nh,hd,ds)
+    h = (h * jnp.exp(dt * A)[..., None, None]
+         + jnp.einsum("bn,bs,bnp->bnps", dt, Bm, xh))
+    y = jnp.einsum("bs,bnps->bnp", Cm, h) \
+        + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out"]
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "state": h}
+
+
+def mamba_cache_pd(cfg, batch: int, dtype=jnp.bfloat16, dp=("data",)):
+    """Abstract cache descriptors for one layer (used by input_specs)."""
+    di, nh, hd, ds = _dims(cfg)
+    W = cfg.ssm.d_conv
+    dp = tuple(dp)
+    return {
+        "conv_x": PD((batch, W - 1, di), spec=P(dp, None, "model"),
+                     init="zeros", dtype=dtype),
+        "conv_B": PD((batch, W - 1, ds), spec=P(dp, None, None),
+                     init="zeros", dtype=dtype),
+        "conv_C": PD((batch, W - 1, ds), spec=P(dp, None, None),
+                     init="zeros", dtype=dtype),
+        "state": PD((batch, nh, hd, ds), spec=P(dp, "model", None, None),
+                    init="zeros", dtype=jnp.float32),
+    }

@@ -1,0 +1,44 @@
+"""Dense FFN blocks: SwiGLU (LLaMA-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PD, dense_pd
+
+
+def swiglu_pd(cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dp = "data" if cfg.fsdp else None
+    down_scale = f ** -0.5 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_gate": dense_pd(d, f, spec=P(dp, "model")),
+        "w_up": dense_pd(d, f, spec=P(dp, "model")),
+        "w_down": dense_pd(f, d, spec=P("model", dp), scale=down_scale),
+    }
+
+
+def swiglu_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def gelu_mlp_pd(cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dp = "data" if cfg.fsdp else None
+    return {
+        "w_in": dense_pd(d, f, spec=P(dp, "model")),
+        "b_in": PD((f,), spec=P("model"), init="zeros"),
+        "w_out": dense_pd(f, d, spec=P("model", dp),
+                          scale=f ** -0.5 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        "b_out": PD((d,), init="zeros"),
+    }
+
+
+def gelu_mlp_apply(p, x):
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h @ p["w_out"] + p["b_out"]

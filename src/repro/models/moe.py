@@ -1,0 +1,171 @@
+"""Mixture-of-Experts with expert parallelism over the ``model`` mesh axis.
+
+Two execution paths, both inside ``shard_map`` so the collective pattern is
+explicit in the lowered HLO (it is a roofline term we track):
+
+* train/prefill (``decode=False``): tokens are sharded over
+  (batch → data axes, sequence → model axis). Each device routes its local
+  tokens, builds fixed-capacity per-expert buffers, and a pair of
+  ``all_to_all`` collectives over the ``model`` axis moves tokens to the
+  devices that own their experts and back (GShard-style EP, capacity drop).
+
+* decode (``decode=True``): one token per request — too small to shard the
+  sequence. Tokens are replicated over ``model``; every device evaluates
+  only its local expert shard for all tokens and a ``psum`` combines.
+
+Shared ("always-on") experts are a plain dense SwiGLU of width
+``n_shared * d_expert`` applied outside this module (tensor-parallel).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PD, dense_pd
+
+
+EP_ALIGN = 16   # production model-axis size: expert stacks pad up to this
+
+
+def padded_experts(cfg) -> int:
+    """Expert-stack size: n_routed padded to a multiple of EP_ALIGN so the
+    stack shards evenly over the model axis (e.g. qwen2-moe's 60 -> 64).
+    The router never selects the dead slots; their buffers stay empty, so
+    the math is exact (documented in DESIGN.md §5)."""
+    e = cfg.moe
+    if e.n_routed % EP_ALIGN == 0 or e.n_routed < EP_ALIGN:
+        return e.n_routed
+    return -(-e.n_routed // EP_ALIGN) * EP_ALIGN
+
+
+def moe_pd(cfg):
+    d = cfg.d_model
+    e = cfg.moe
+    E = padded_experts(cfg)
+    scale_in = d ** -0.5
+    scale_out = e.d_expert ** -0.5 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "router": dense_pd(d, e.n_routed, spec=P(None, None), scale=scale_in),
+        "w_gate": PD((E, d, e.d_expert), spec=P("model", None, None),
+                     scale=scale_in),
+        "w_up": PD((E, d, e.d_expert), spec=P("model", None, None),
+                   scale=scale_in),
+        "w_down": PD((E, e.d_expert, d), spec=P("model", None, None),
+                     scale=scale_out),
+    }
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _route(x_flat, router_w, e):
+    """Top-k routing. Returns gates (T,k) f32, ids (T,k) i32, aux-loss."""
+    logits = (x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, e.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    f = jnp.zeros(e.n_routed).at[ids.reshape(-1)].add(1.0) / ids.size
+    p = probs.mean(0)
+    aux = e.n_routed * jnp.sum(f * p)
+    return gates, ids, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, xs):
+    """xs: (E_loc, C, d) -> (E_loc, C, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xs, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_apply(p, x, cfg, mesh, *, decode: bool):
+    """x: (B, S, d) global. Returns (out, aux_loss scalar)."""
+    e = cfg.moe
+    dp = _dp_axes(mesh)
+    tp = mesh.shape["model"]
+    if decode or x.shape[1] < tp:
+        in_spec = P(dp, None, None)
+        fn = partial(_moe_local_psum, cfg=cfg, tp=tp, dp=dp)
+    else:
+        in_spec = P(dp, "model", None)
+        fn = partial(_moe_a2a, cfg=cfg, tp=tp, dp=dp)
+    wspec = P("model", None, None)
+    out, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(in_spec, P(None, None), wspec, wspec, wspec),
+        out_specs=(in_spec, P()),
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux
+
+
+def _moe_a2a(x, router_w, w_gate, w_up, w_down, *, cfg, tp, dp):
+    """Per-device body, tokens sharded over (dp, model). EP via all_to_all."""
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    gates, ids, aux = _route(x_flat, router_w, e)
+    E = w_gate.shape[0] * tp          # padded expert-stack size
+    C = max(4, int(math.ceil(T * e.top_k / e.n_routed
+                             * e.capacity_factor)))
+
+    ids_f = ids.reshape(-1)                       # (T*k,) all < n_routed
+    gates_f = gates.reshape(-1)
+    tok_f = jnp.repeat(jnp.arange(T), e.top_k)
+    onehot = jax.nn.one_hot(ids_f, E, dtype=jnp.int32)
+    pos_f = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # slot in expert
+    keep = pos_f < C
+    ids_safe = jnp.where(keep, ids_f, E)          # E -> dropped (mode=drop)
+    pos_safe = jnp.where(keep, pos_f, 0)
+
+    disp = jnp.full((E, C), T, jnp.int32)         # sentinel T = zero row
+    disp = disp.at[ids_safe, pos_safe].set(tok_f, mode="drop")
+    gate_ec = jnp.zeros((E, C), jnp.float32)
+    gate_ec = gate_ec.at[ids_safe, pos_safe].set(gates_f, mode="drop")
+
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)], 0)
+    xs = x_pad[disp]                              # (E, C, d)
+    if tp > 1:
+        xs = jax.lax.all_to_all(xs, "model", split_axis=0, concat_axis=1,
+                                tiled=True)       # (E/tp, tp*C, d)
+    ys = _expert_ffn(w_gate, w_up, w_down, xs)
+    if tp > 1:
+        ys = jax.lax.all_to_all(ys, "model", split_axis=1, concat_axis=0,
+                                tiled=True)       # (E, C, d)
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    out = out.at[disp].add(ys.astype(jnp.float32)
+                           * gate_ec[..., None])
+    out = out[:T].reshape(B, S, d).astype(x.dtype)
+    aux = jax.lax.pmean(aux, dp + ("model",))
+    return out, aux
+
+
+def _moe_local_psum(x, router_w, w_gate, w_up, w_down, *, cfg, tp, dp):
+    """Per-device body, tokens replicated over 'model'. Each device runs its
+    local expert shard on all tokens; psum combines. Decode-sized T only."""
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x_flat = x.reshape(T, d)
+    gates, ids, aux = _route(x_flat, router_w, e)
+    E_loc = w_gate.shape[0]
+    offset = jax.lax.axis_index("model") * E_loc
+    # (T, E_loc) combine weights for the local experts
+    local_slot = ids - offset                     # (T, k)
+    in_range = (local_slot >= 0) & (local_slot < E_loc)
+    comb = jnp.zeros((T, E_loc), jnp.float32)
+    comb = comb.at[jnp.arange(T)[:, None], jnp.where(in_range, local_slot, 0)
+                   ].add(jnp.where(in_range, gates, 0.0))
+    # evaluate every local expert on all tokens (T is decode-sized)
+    h = _expert_ffn(w_gate, w_up, w_down,
+                    jnp.broadcast_to(x_flat[None], (E_loc, T, d)))
+    out = jnp.einsum("te,etd->td", comb, h.astype(jnp.float32))
+    out = jax.lax.psum(out.astype(jnp.float32), "model")
+    # tokens are replicated over 'model' here: aux only varies over dp
+    aux = jax.lax.pmean(aux, dp) if dp else aux
+    return out.reshape(B, S, d).astype(x.dtype), aux

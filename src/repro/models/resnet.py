@@ -1,0 +1,150 @@
+"""ResNet-50 (He et al. 2016) — the paper's own architecture, in pure JAX.
+
+BatchNorm follows the paper's §III-A.2: moving averages of mean/variance are
+computed *per process* (no cross-replica sync by default) with a tunable
+momentum; ``sync_bn=True`` switches to cross-replica statistics via ``pmean``
+inside ``shard_map`` for the ablation benchmark.
+
+BN statistics live in a separate ``bn_state`` pytree (not touched by the
+optimizer); ``forward`` returns updated statistics in train mode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PD
+
+STAGES = ((3, 64), (4, 128), (6, 256), (3, 512))  # (blocks, base width)
+
+
+def _conv_pd(kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return PD((kh, kw, cin, cout), scale=(2.0 / fan_in) ** 0.5)
+
+
+def _bn_pd(c):
+    return {"scale": PD((c,), init="ones"), "bias": PD((c,), init="zeros")}
+
+
+def _bn_state_pd(c):
+    return {"mean": PD((c,), init="zeros"),
+            "var": PD((c,), init="ones")}
+
+
+def resnet_pd(cfg) -> Tuple[dict, dict]:
+    """Returns (params descriptors, bn-state descriptors)."""
+    w = cfg.width
+    params = {"stem": {"conv": _conv_pd(7, 7, 3, w), "bn": _bn_pd(w)}}
+    state = {"stem": {"bn": _bn_state_pd(w)}}
+    cin = w
+    for si, (blocks, base) in enumerate(STAGES):
+        base = base * w // 64
+        for bi in range(blocks):
+            cout = base * 4
+            name = f"s{si}b{bi}"
+            blk = {
+                "conv1": _conv_pd(1, 1, cin, base), "bn1": _bn_pd(base),
+                "conv2": _conv_pd(3, 3, base, base), "bn2": _bn_pd(base),
+                "conv3": _conv_pd(1, 1, base, cout), "bn3": _bn_pd(cout),
+            }
+            st = {"bn1": _bn_state_pd(base), "bn2": _bn_state_pd(base),
+                  "bn3": _bn_state_pd(cout)}
+            if bi == 0:
+                blk["proj"] = _conv_pd(1, 1, cin, cout)
+                blk["bn_proj"] = _bn_pd(cout)
+                st["bn_proj"] = _bn_state_pd(cout)
+            params[name] = blk
+            state[name] = st
+            cin = cout
+    params["head"] = {
+        "w": PD((cin, cfg.n_classes), scale=cin ** -0.5),
+        "b": PD((cfg.n_classes,), init="zeros"),
+    }
+    return params, state
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, st, *, train: bool, momentum: float, eps=1e-5, mesh=None,
+        sync=False):
+    xf = x.astype(jnp.float32)
+    if train:
+        mean = xf.mean((0, 1, 2))
+        var = xf.var((0, 1, 2))
+        if sync and mesh is not None:
+            # cross-replica statistics (ablation; the paper uses local BN)
+            from repro.models.common import dp_axes
+            spec = P(dp_axes(mesh), None, None, None)
+            def stats(xl):
+                m = xl.astype(jnp.float32).mean((0, 1, 2))
+                v = xl.astype(jnp.float32).var((0, 1, 2))
+                m2 = jax.lax.pmean(m, dp_axes(mesh))
+                v2 = jax.lax.pmean(v + m * m, dp_axes(mesh)) - m2 * m2
+                return m2, v2
+            mean, var = jax.shard_map(
+                stats, mesh=mesh, in_specs=spec,
+                out_specs=(P(), P()))(x)
+        new_st = {
+            "mean": momentum * st["mean"] + (1 - momentum) * mean,
+            "var": momentum * st["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = st["mean"], st["var"]
+        new_st = st
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_st
+
+
+def resnet_forward(params, bn_state, cfg, images, *, train: bool, mesh=None):
+    """images: (B,H,W,3). Returns (logits, new_bn_state)."""
+    mom, sync = cfg.bn_momentum, cfg.sync_bn
+    x = images.astype(jnp.bfloat16)
+    new_state = {}
+
+    x = _conv(x, params["stem"]["conv"], stride=2)
+    x, st = _bn(x, params["stem"]["bn"], bn_state["stem"]["bn"], train=train,
+                momentum=mom, mesh=mesh, sync=sync)
+    new_state["stem"] = {"bn": st}
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+
+    for si, (blocks, _) in enumerate(STAGES):
+        for bi in range(blocks):
+            name = f"s{si}b{bi}"
+            p, st_in = params[name], bn_state[name]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            sts = {}
+            h = _conv(x, p["conv1"])
+            h, sts["bn1"] = _bn(h, p["bn1"], st_in["bn1"], train=train,
+                                momentum=mom, mesh=mesh, sync=sync)
+            h = jax.nn.relu(h)
+            h = _conv(h, p["conv2"], stride=stride)
+            h, sts["bn2"] = _bn(h, p["bn2"], st_in["bn2"], train=train,
+                                momentum=mom, mesh=mesh, sync=sync)
+            h = jax.nn.relu(h)
+            h = _conv(h, p["conv3"])
+            h, sts["bn3"] = _bn(h, p["bn3"], st_in["bn3"], train=train,
+                                momentum=mom, mesh=mesh, sync=sync)
+            if "proj" in p:
+                sc = _conv(x, p["proj"], stride=stride)
+                sc, sts["bn_proj"] = _bn(sc, p["bn_proj"], st_in["bn_proj"],
+                                         train=train, momentum=mom,
+                                         mesh=mesh, sync=sync)
+            else:
+                sc = x
+            x = jax.nn.relu(h + sc)
+            new_state[name] = sts
+
+    x = x.mean((1, 2)).astype(jnp.float32)
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state

@@ -1,0 +1,268 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix-memory,
+chunkwise-parallel linear attention with exponential gating + stabilizer
+state) and sLSTM (scalar-memory recurrence with block-diagonal
+head-recurrent weights).
+
+mLSTM trains in a chunked parallel form (intra-chunk quadratic + inter-chunk
+(C, n, m) state scan) and decodes recurrently — sub-quadratic, which is what
+qualifies xlstm-125m for the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import PD, dense_pd, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def mlstm_pd(cfg):
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor_m * d)
+    return {
+        "w_up": dense_pd(d, di, spec=P(None, "model")),
+        "w_z": dense_pd(d, di, spec=P(None, "model")),
+        "wq": dense_pd(di, di, spec=P(None, "model")),
+        "wk": dense_pd(di, di, spec=P(None, "model")),
+        "wv": dense_pd(di, di, spec=P(None, "model")),
+        "w_i": dense_pd(di, cfg.n_heads, spec=P(None, None)),
+        "w_f": dense_pd(di, cfg.n_heads, spec=P(None, None)),
+        "b_i": PD((cfg.n_heads,), init="zeros"),
+        "b_f": PD((cfg.n_heads,), init="const", scale=3.0),
+        "norm": PD((di,), spec=P("model"), init="ones"),
+        "out": dense_pd(di, d, spec=P("model", None),
+                        scale=di ** -0.5 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mlstm_heads(cfg):
+    di = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    nh = cfg.n_heads
+    return di, nh, di // nh
+
+
+def mlstm_parallel(p, x, cfg, *, return_cache: bool = False):
+    """Chunkwise-parallel mLSTM. x: (B,S,d)."""
+    di, nh, hd = _mlstm_heads(cfg)
+    cl = cfg.xlstm.chunk
+    B, S, _ = x.shape
+    if S % cl:
+        if return_cache:
+            # padding would decay the recurrent state on fake steps; use
+            # the largest divisor chunk instead (exact, possibly slower)
+            c = min(cl, S)
+            while S % c:
+                c -= 1
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, xlstm=_dc.replace(cfg.xlstm, chunk=c))
+            return mlstm_parallel(p, x, cfg, return_cache=True)
+        pad = (-S) % cl
+        out, _ = mlstm_parallel(p, jnp.pad(x, ((0, 0), (0, pad), (0, 0))),
+                                cfg)
+        return out[:, :S], None
+    nc = S // cl
+
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    q = (u @ p["wq"]).reshape(B, S, nh, hd).astype(jnp.float32) * hd ** -0.5
+    k = (u @ p["wk"]).reshape(B, S, nh, hd).astype(jnp.float32) * hd ** -0.5
+    v = (u @ p["wv"]).reshape(B, S, nh, hd).astype(jnp.float32)
+    ig = ((u @ p["w_i"]) + p["b_i"]).astype(jnp.float32)        # (B,S,nh)
+    fg = jax.nn.log_sigmoid(((u @ p["w_f"]) + p["b_f"]).astype(jnp.float32))
+
+    qc = q.reshape(B, nc, cl, nh, hd)
+    kc = k.reshape(B, nc, cl, nh, hd)
+    vc = v.reshape(B, nc, cl, nh, hd)
+    igc = ig.reshape(B, nc, cl, nh)
+    b = jnp.cumsum(fg.reshape(B, nc, cl, nh), axis=2)           # within-chunk
+
+    # intra-chunk log weights D[i,j] = b_i - b_j + i_j  (i >= j)
+    Dlog = b[:, :, :, None, :] - b[:, :, None, :, :] + igc[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    Dlog = jnp.where(mask[None, None, :, :, None], Dlog, -jnp.inf)
+
+    def body(carry, xs):
+        C, n, m = carry       # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+        qi, ki, vi, bi, igi, Di = xs
+        # stabilizer per query position
+        m_intra = Di.max(axis=2)                                # (B,cl,nh)
+        m_i = jnp.maximum(m[:, None] + bi, m_intra)             # (B,cl,nh)
+        inter_w = jnp.exp(m[:, None] + bi - m_i)                # (B,cl,nh)
+        Dw = jnp.exp(Di - m_i[:, :, None, :])                   # (B,i,j,nh)
+        qk = jnp.einsum("binp,bjnp->bijn", qi, ki) * Dw
+        num = (jnp.einsum("bijn,bjnp->binp", qk, vi)
+               + inter_w[..., None] * jnp.einsum("binp,bnpv->binv", qi, C))
+        den = (qk.sum(axis=2)
+               + inter_w * jnp.einsum("binp,bnp->bin", qi, n))
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # chunk-end state update
+        b_end = bi[:, -1]                                       # (B,nh)
+        scale = b_end[:, None] - bi + igi                       # (B,cl,nh)
+        m_new = jnp.maximum(m + b_end, scale.max(axis=1))
+        C = (jnp.exp(m + b_end - m_new)[..., None, None] * C
+             + jnp.einsum("bjn,bjnp,bjnv->bnpv",
+                          jnp.exp(scale - m_new[:, None]), ki, vi))
+        n = (jnp.exp(m + b_end - m_new)[..., None] * n
+             + jnp.einsum("bjn,bjnp->bnp",
+                          jnp.exp(scale - m_new[:, None]), ki))
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.full((B, nh), -jnp.inf, jnp.float32)
+    mv = lambda t: jnp.moveaxis(t, 1, 0)
+    (C, n, m), hs = jax.lax.scan(
+        body, (C0, n0, m0),
+        (mv(qc), mv(kc), mv(vc), mv(b), mv(igc), mv(Dlog)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = h @ p["out"]
+    cache = {"C": C, "n": n, "m": m} if return_cache else None
+    return out, cache
+
+
+def mlstm_decode(p, x, cfg, cache):
+    di, nh, hd = _mlstm_heads(cfg)
+    B = x.shape[0]
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    q = (u @ p["wq"]).reshape(B, nh, hd).astype(jnp.float32) * hd ** -0.5
+    k = (u @ p["wk"]).reshape(B, nh, hd).astype(jnp.float32) * hd ** -0.5
+    v = (u @ p["wv"]).reshape(B, nh, hd).astype(jnp.float32)
+    ig = ((u @ p["w_i"]) + p["b_i"]).astype(jnp.float32)[:, 0]  # (B,nh)
+    fg = jax.nn.log_sigmoid(((u @ p["w_f"]) + p["b_f"])
+                            .astype(jnp.float32))[:, 0]
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(fg + m, ig)
+    fw = jnp.exp(fg + m - m_new)[..., None]
+    iw = jnp.exp(ig - m_new)[..., None]
+    C = fw[..., None] * C + iw[..., None] * (k[..., None] * v[..., None, :])
+    n = fw * n + iw * k
+    num = jnp.einsum("bnp,bnpv->bnv", q, C)
+    den = jnp.einsum("bnp,bnp->bn", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, di).astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.rms_eps) * jax.nn.silu(z)
+    return h @ p["out"], {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_cache_pd(cfg, batch: int, dp=("data",)):
+    di, nh, hd = _mlstm_heads(cfg)
+    dp = tuple(dp)
+    return {
+        "C": PD((batch, nh, hd, hd), spec=P(dp, None, None, None),
+                init="zeros", dtype=jnp.float32),
+        "n": PD((batch, nh, hd), spec=P(dp, None, None), init="zeros",
+                dtype=jnp.float32),
+        "m": PD((batch, nh), spec=P(dp, None), init="const",
+                scale=-1e30, dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_pd(cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    df = int(cfg.xlstm.proj_factor_s * d)
+    p = {}
+    for g in ("i", "f", "z", "o"):
+        p[f"w_{g}"] = dense_pd(d, d, spec=P(None, "model"))
+        p[f"r_{g}"] = PD((nh, hd, hd), scale=hd ** -0.5)
+        p[f"b_{g}"] = (PD((d,), init="const", scale=3.0) if g == "f"
+                       else PD((d,), init="zeros"))
+    p["norm"] = PD((d,), init="ones")
+    p["ffn_up"] = dense_pd(d, df, spec=P(None, "model"))
+    p["ffn_down"] = dense_pd(df, d, spec=P("model", None),
+                             scale=df ** -0.5 / math.sqrt(2 * cfg.n_layers))
+    return p
+
+
+def _slstm_step(p, nh, hd, carry, xg):
+    """xg: precomputed input gate pre-activations (4, B, d)."""
+    c, n, h, m = carry
+    B = c.shape[0]
+    hh = h.reshape(B, nh, hd)
+
+    def rec(name):
+        return jnp.einsum("bnp,npq->bnq", hh, p[f"r_{name}"]
+                          .astype(jnp.float32)).reshape(B, nh * hd)
+
+    it = xg[0] + rec("i")
+    ft = xg[1] + rec("f")
+    zt = jnp.tanh(xg[2] + rec("z"))
+    ot = jax.nn.sigmoid(xg[3] + rec("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f * c + i * zt
+    n = f * n + i
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new), h
+
+
+def slstm_parallel(p, x, cfg, *, return_cache: bool = False):
+    """Sequential scan over time (sLSTM has a true recurrence)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    B, S, _ = x.shape
+    xf = x.astype(jnp.float32)
+    xg = jnp.stack([xf @ p[f"w_{g}"].astype(jnp.float32)
+                    + p[f"b_{g}"].astype(jnp.float32)
+                    for g in ("i", "f", "z", "o")])            # (4,B,S,d)
+
+    def body(carry, xs):
+        return _slstm_step(p, nh, hd, carry, xs)
+
+    zeros = jnp.zeros((B, d), jnp.float32)
+    carry0 = (zeros, zeros, zeros, jnp.full((B, d), -1e30, jnp.float32))
+    carry, hs = jax.lax.scan(body, carry0, jnp.moveaxis(xg, 2, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                 # (B,S,d)
+    h = rms_norm(h, p["norm"], cfg.rms_eps)
+    out = h + jax.nn.gelu(h @ p["ffn_up"]) @ p["ffn_down"]
+    cache = None
+    if return_cache:
+        c, n, hh, m = carry
+        cache = {"c": c, "n": n, "h": hh, "m": m}
+    return out, cache
+
+
+def slstm_decode(p, x, cfg, cache):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    B = x.shape[0]
+    xf = x[:, 0].astype(jnp.float32)
+    xg = jnp.stack([xf @ p[f"w_{g}"].astype(jnp.float32)
+                    + p[f"b_{g}"].astype(jnp.float32)
+                    for g in ("i", "f", "z", "o")])            # (4,B,d)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), h = _slstm_step(p, nh, hd, carry, xg)
+    h = rms_norm(h[:, None].astype(x.dtype), p["norm"], cfg.rms_eps)
+    out = h + jax.nn.gelu(h @ p["ffn_up"]) @ p["ffn_down"]
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_cache_pd(cfg, batch: int, dp=("data",)):
+    d = cfg.d_model
+    dp = tuple(dp)
+    mk = lambda init, scale=0.0: PD((batch, d), spec=P(dp, None),
+                                    init=init, scale=scale, dtype=jnp.float32)
+    return {"c": mk("zeros"), "n": mk("zeros"), "h": mk("zeros"),
+            "m": mk("const", -1e30)}
+
+
+def block_kind(cfg, layer_idx: int) -> str:
+    pat = cfg.xlstm.pattern
+    return pat[layer_idx % len(pat)]

@@ -1,0 +1,56 @@
+"""Serving: prefill + single-token decode steps and a batched greedy
+generation loop. ``serve_step`` (one new token against a seq_len cache) is
+what the decode_32k / long_500k input shapes lower in the dry-run."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pinit
+
+
+def make_prefill_step(model, cache_len: int, mesh=None):
+    def prefill_step(params, batch):
+        logits, cache = model.forward_prefill(params, batch, cache_len, mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return prefill_step
+
+
+def make_serve_step(model, mesh=None):
+    """serve_step(params, cache, token, pos) -> (next_token, logits, cache)."""
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.forward_decode(params, cache, token, pos, mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+    return serve_step
+
+
+def abstract_cache(model, batch: int, max_seq: int):
+    """ShapeDtypeStruct cache for .lower() (decode dry-run input)."""
+    return pinit.abstract(model.cache_pd(batch, max_seq))
+
+
+def cache_specs(model, batch: int, max_seq: int):
+    return pinit.specs(model.cache_pd(batch, max_seq))
+
+
+def generate(model, params, batch, *, max_new: int, cache_len: int,
+             mesh=None):
+    """Batched greedy generation (example/serve driver)."""
+    cfg = model.cfg
+    prefill = jax.jit(make_prefill_step(model, cache_len, mesh))
+    step = jax.jit(make_serve_step(model, mesh))
+    tok, cache = prefill(params, batch)
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        prompt_len += cfg.encoder.n_frames
+    out = [tok]
+    pos = prompt_len
+    for _ in range(max_new - 1):
+        tok, _, cache = step(params, cache, tok, jnp.int32(pos))
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

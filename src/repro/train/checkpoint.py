@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> .npz with path-keyed entries + step metadata.
+
+Arrays are gathered to host before saving (fine for the CPU validation
+scale; on a real pod this would be per-host sharded — noted in DESIGN.md)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.train.state import TrainState
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(state: TrainState, ckpt_dir: str, *, tag: str = "last") -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"ckpt_{tag}.npz")
+    payload = {}
+    payload.update({f"params{_SEP}{k}": v
+                    for k, v in _flatten(state.params).items()})
+    payload.update({f"mom{_SEP}{k}": v
+                    for k, v in _flatten(state.mom).items()})
+    if state.bn_state is not None:
+        payload.update({f"bn{_SEP}{k}": v
+                        for k, v in _flatten(state.bn_state).items()})
+    np.savez(path, **payload)
+    meta = {"step": int(state.step), "tag": tag}
+    with open(os.path.join(ckpt_dir, f"meta_{tag}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load(template: TrainState, ckpt_dir: str, *, tag: str = "last"
+         ) -> TrainState:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{tag}.npz"))
+    with open(os.path.join(ckpt_dir, f"meta_{tag}.json")) as f:
+        meta = json.load(f)
+
+    def restore(prefix, tree):
+        flat = _flatten(tree)
+        out = {}
+        for k in flat:
+            arr = data[f"{prefix}{_SEP}{k}"]
+            assert arr.shape == flat[k].shape, (k, arr.shape, flat[k].shape)
+            out[k] = arr
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        new_leaves = []
+        for path, leaf in leaves_p:
+            key = _SEP.join(str(getattr(kk, "key", getattr(kk, "idx", kk)))
+                            for kk in path)
+            new_leaves.append(jax.numpy.asarray(out[key], leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    params = restore("params", template.params)
+    mom = restore("mom", template.mom)
+    bn = (restore("bn", template.bn_state)
+          if template.bn_state is not None else None)
+    return TrainState(jax.numpy.asarray(meta["step"], jax.numpy.int32),
+                      params, mom, bn)

@@ -1,0 +1,56 @@
+"""Training loop with MLPerf-v0.5.0-style tags (the paper's Appendix 1 log
+format: run_start / train_epoch / eval_accuracy / run_stop)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.train import checkpoint as ckpt
+from repro.train.state import TrainState
+
+
+def mlperf_log(tag: str, value=None):
+    ts = time.time()
+    suffix = "" if value is None else f": {value}"
+    print(f":::MLPv0.5.0 repro {ts:.9f} (repro/train/loop.py) {tag}{suffix}",
+          flush=True)
+
+
+def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
+          steps: int, eval_step: Optional[Callable] = None,
+          eval_batch_fn: Optional[Callable] = None, eval_every: int = 0,
+          log_every: int = 10, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 0, seed: int = 0):
+    """Runs ``steps`` optimizer steps. Returns (state, history)."""
+    mlperf_log("run_start")
+    mlperf_log("run_set_random_seed", seed)
+    history = []
+    t0 = time.time()
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+    for i in range(steps):
+        batch = batch_fn(state.step)
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            mlperf_log("train_step",
+                       {"step": i, "loss": round(m["loss"], 4),
+                        "lr": round(m.get("lr", 0.0), 6)})
+        if eval_every and eval_step is not None and (i + 1) % eval_every == 0:
+            mlperf_log("eval_start")
+            eb = eval_batch_fn(state.step + 100_000)
+            em = {k: float(v) for k, v in
+                  jax.jit(eval_step)(state.params, eb, state.bn_state).items()}
+            mlperf_log("eval_accuracy", {"step": i, **{k: round(v, 4)
+                                                       for k, v in em.items()}})
+            mlperf_log("eval_stop")
+            history.append({"step": i, **{f"eval_{k}": v
+                                          for k, v in em.items()}})
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            ckpt.save(state, ckpt_dir)
+    dt = time.time() - t0
+    mlperf_log("run_stop", {"steps": steps, "wall_s": round(dt, 2)})
+    mlperf_log("run_final")
+    return state, history

@@ -1,0 +1,46 @@
+"""Train state: fp32 master params + momentum (paper's mixed-precision
+scheme keeps the update in fp32), BN statistics for the conv family."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lars, pinit
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any          # fp32 master
+    mom: Any             # fp32 momentum buffers
+    bn_state: Any = None # resnet only
+
+
+def init_state(model, seed: int = 0, mesh=None,
+               opt_kind: str = "lars") -> TrainState:
+    params = pinit.materialize(model.param_pd, seed, mesh)
+    mom = lars.init_momentum(params, opt_kind)
+    bn = None
+    if model.bn_state_pd is not None:
+        bn = pinit.materialize(model.bn_state_pd, seed, mesh)
+    return TrainState(jnp.zeros((), jnp.int32), params, mom, bn)
+
+
+def abstract_state(model) -> TrainState:
+    """ShapeDtypeStruct state (for .lower() without allocation)."""
+    params = pinit.abstract(model.param_pd)
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       params)
+    bn = (pinit.abstract(model.bn_state_pd)
+          if model.bn_state_pd is not None else None)
+    return TrainState(jax.ShapeDtypeStruct((), jnp.int32), params, mom, bn)
+
+
+def state_specs(model) -> TrainState:
+    """PartitionSpec pytree for the state."""
+    from jax.sharding import PartitionSpec as P
+    pspec = pinit.specs(model.param_pd)
+    bn = (pinit.specs(model.bn_state_pd)
+          if model.bn_state_pd is not None else None)
+    return TrainState(P(), pspec, pspec, bn)

@@ -1,0 +1,168 @@
+"""Train/eval steps.
+
+Two distribution paths (DESIGN.md §2.2):
+
+* ``comm='xla'`` — pjit/GSPMD: batch sharded over data axes, params sharded
+  per their PartitionSpecs (tensor/expert-parallel over 'model', optional
+  FSDP over 'data'); gradient reduction collectives are inserted by GSPMD.
+  Used by every architecture, and the only path for TP/EP models.
+
+* ``comm='bucketed' | 'naive'`` — the paper's §III-C explicit data-parallel
+  communication, inside ``shard_map`` over ALL mesh axes (pure DP): grads
+  are packed into static several-MB bucket groups in backward-completion
+  order and one ``psum`` is issued per bucket ('bucketed'), or one per
+  tensor ('naive' — the baseline the paper measures against). Restricted to
+  replicated-parameter models (the paper's ResNet-50 and the small LMs).
+
+The loss is label-smoothed cross entropy (paper §III-A.2) + MoE aux; the
+optimizer is LARS or momentum-SGD (paper §III-A.1) on fp32 masters with
+bf16 compute/communication (paper §IV).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bucketing, ddp, lars
+from repro.core.label_smoothing import IGNORE, smoothed_xent, top1_accuracy
+from repro.core.precision import cast_to_compute
+from repro.train.state import TrainState
+
+
+def _lm_loss(logits, labels, *, smoothing):
+    S_logits = logits.shape[1]
+    S_lab = labels.shape[1] if labels.ndim > 1 else None
+    if S_lab is not None and S_logits != S_lab:
+        # VLM: image-prefix positions carry no labels
+        pad = jnp.full((labels.shape[0], S_logits - S_lab), IGNORE,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return smoothed_xent(logits, labels, smoothing=smoothing)
+
+
+def make_loss_fn(model, *, smoothing: float = 0.1, aux_coef: float = 0.01,
+                 mesh=None):
+    cfg = model.cfg
+
+    def loss_fn(params, batch, bn_state=None):
+        (logits, aux), new_bn = model.forward_train(params, batch, mesh,
+                                                    bn_state)
+        loss, n = _lm_loss(logits, batch["labels"], smoothing=smoothing)
+        total = loss + aux_coef * aux
+        acc = top1_accuracy(logits, batch["labels"]
+                            if logits.shape[:-1] == batch["labels"].shape
+                            else jnp.full(logits.shape[:-1], IGNORE))
+        metrics = {"loss": loss, "aux": aux, "acc": acc}
+        return total, (metrics, new_bn)
+
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
+                    smoothing: float = 0.1, mesh=None, comm: str = "xla",
+                    bucket_mb: float = 4.0, comm_dtype: str = "bf16",
+                    grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics). Not jitted —
+    the caller owns jit/shardings (launcher, dryrun, tests).
+
+    comm_dtype='bf16' (paper §IV): gradients are taken w.r.t. the bf16
+    compute copy of the weights, so the data-parallel reduction GSPMD
+    inserts runs on half-precision tensors; the fp32 upcast happens in the
+    optimizer. 'f32' reproduces the fp32-wire baseline."""
+    loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=mesh)
+
+    def sgd_update(state: TrainState, grads, metrics, new_bn):
+        lr = schedule(state.step)
+        params, mom = lars.update(state.params, grads, state.mom, lr,
+                                  opt_cfg)
+        metrics = dict(metrics, lr=lr)
+        return TrainState(state.step + 1, params, mom, new_bn), metrics
+
+    if comm == "xla":
+        def train_step(state: TrainState, batch):
+            p_in = (cast_to_compute(state.params) if comm_dtype == "bf16"
+                    else state.params)
+            if grad_accum == 1:
+                (_, (metrics, new_bn)), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p_in, batch, state.bn_state)
+                return sgd_update(state, grads, metrics, new_bn)
+
+            # gradient accumulation: the paper's 81,920 global batch on a
+            # smaller chip count = scan over microbatches, mean the grads
+            micro = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+
+            def acc_fn(carry, mb):
+                g_acc, bn = carry
+                (_, (metrics, new_bn)), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p_in, mb, bn)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, new_bn), metrics
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              p_in)
+            (grads, new_bn), ms = jax.lax.scan(
+                acc_fn, (g0, state.bn_state), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+            return sgd_update(state, grads, metrics, new_bn)
+        return train_step
+
+    # ------ explicit-DDP path (paper §III-C), pure data parallelism ------
+    assert mesh is not None
+    axes = tuple(mesh.axis_names)          # every axis is data-parallel
+    plan = bucketing.make_plan(jax.tree.map(
+        lambda pd: pd, model.param_pd), bucket_mb=bucket_mb)
+
+    def local_step(state: TrainState, batch):
+        (_, (metrics, new_bn)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, state.bn_state)
+        grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
+                                    plan=plan)
+        if new_bn is not None:
+            # BN batch stats stay local (paper §III-A.2); only the moving-
+            # average *buffers* are averaged so the SPMD state is replicated
+            new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
+        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        state, metrics = sgd_update(state, grads, metrics, new_bn)
+        return state, metrics
+
+    def train_step(state: TrainState, batch):
+        batch_specs = {k: P(axes, *([None] * (v.ndim - 1)))
+                       for k, v in batch.items()}
+        state_spec = jax.tree.map(lambda _: P(), state)
+        return jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_spec, batch_specs),
+            out_specs=(state_spec,
+                       {"loss": P(), "aux": P(), "acc": P(), "lr": P()}),
+        )(state, batch)
+
+    return train_step
+
+
+def make_eval_step(model, *, smoothing: float = 0.0, mesh=None):
+    loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=mesh)
+
+    def eval_step(params, batch, bn_state=None):
+        cfg = model.cfg
+        if cfg.family == "conv":
+            from repro.models.resnet import resnet_forward
+            from repro.core.precision import cast_to_compute
+            logits, _ = resnet_forward(cast_to_compute(params), bn_state,
+                                       cfg, batch["images"], train=False,
+                                       mesh=mesh)
+            loss, _ = smoothed_xent(logits, batch["labels"], smoothing=0.0)
+            return {"loss": loss,
+                    "acc": top1_accuracy(logits, batch["labels"])}
+        (logits, aux), _ = model.forward_train(params, batch, mesh, None)
+        loss, _ = _lm_loss(logits, batch["labels"], smoothing=0.0)
+        return {"loss": loss, "acc": jnp.float32(0)}
+
+    return eval_step

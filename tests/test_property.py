@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bucketing
+from repro.core.label_smoothing import smoothed_xent
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.models.attention import chunked_attention
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------- bucketing
+
+@st.composite
+def tensor_trees(draw):
+    n = draw(st.integers(1, 8))
+    tree = {}
+    for i in range(n):
+        r = draw(st.integers(1, 2))
+        dims = tuple(draw(st.integers(1, 300)) for _ in range(r))
+        tree[f"t{i}"] = np.arange(np.prod(dims), dtype=np.float32).reshape(
+            dims) + i
+    return tree
+
+
+@given(tensor_trees(), st.floats(0.01, 2.0))
+@settings(**SET)
+def test_pack_unpack_identity(tree, mb):
+    """unpack(pack(x)) == x for any tree and bucket size — the paper's
+    bucketed allreduce must be a pure layout transform."""
+    plan = bucketing.make_plan(tree, bucket_mb=mb)
+    bufs = bucketing.pack(tree, plan, dtype=jnp.float32)
+    back = bucketing.unpack(bufs, plan, dtype=jnp.float32)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 tree, back)
+
+
+@given(tensor_trees())
+@settings(**SET)
+def test_plan_partitions_every_tensor_once(tree):
+    plan = bucketing.make_plan(tree)
+    assert plan.n_tensors == len(jax.tree.leaves(tree))
+    # offsets within a bucket never overlap
+    by_bucket = {}
+    for s in plan.slots:
+        by_bucket.setdefault(s.bucket, []).append(s)
+    for slots in by_bucket.values():
+        slots.sort(key=lambda s: s.offset)
+        for a, b in zip(slots, slots[1:]):
+            assert a.offset + a.padded <= b.offset
+    # buckets are contiguous 0..n-1
+    assert sorted(by_bucket) == list(range(plan.n_buckets))
+
+
+# -------------------------------------------------------------- schedule
+
+@given(st.integers(0, 5000), st.integers(1, 200),
+       st.sampled_from(["const", "linear", "poly2", "cosine", "step"]))
+@settings(**SET)
+def test_lr_bounded_and_nonnegative(step, warmup, decay):
+    sc = ScheduleConfig(base_lr=1.0, warmup_steps=warmup, total_steps=1000,
+                        decay=decay, end_lr=0.001)
+    v = float(make_schedule(sc)(step))
+    assert 0.0 <= v <= 1.0 + 1e-6
+
+
+# ------------------------------------------------------------- smoothing
+
+@given(st.integers(2, 64), st.integers(2, 200), st.floats(0.0, 0.5))
+@settings(**SET)
+def test_smoothed_loss_lower_bounded_by_smoothed_entropy(T, V, eps):
+    """Smoothed NLL >= the smoothed target distribution's cross entropy with
+    itself at the optimum; in particular it is always >= 0 for eps<=0.5 and
+    finite."""
+    k = jax.random.PRNGKey(T * V)
+    logits = 3.0 * jax.random.normal(k, (T, V))
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (T,), 0, V)
+    loss, n = smoothed_xent(logits, labels, smoothing=eps)
+    assert np.isfinite(float(loss))
+    assert float(loss) >= -1e-5
+    assert int(n) == T
+
+
+@given(st.integers(2, 32), st.integers(3, 64))
+@settings(**SET)
+def test_xent_invariant_to_logit_shift(T, V):
+    """softmax shift invariance must survive the streaming implementation."""
+    k = jax.random.PRNGKey(T + 17 * V)
+    logits = 2.0 * jax.random.normal(k, (T, V))
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (T,), 0, V)
+    l1, _ = smoothed_xent(logits, labels, smoothing=0.1)
+    l2, _ = smoothed_xent(logits + 123.0, labels, smoothing=0.1)
+    assert float(l1) == pytest_approx(float(l2))
+
+
+def pytest_approx(x):
+    import pytest
+    return pytest.approx(x, rel=1e-4, abs=1e-4)
+
+
+# ------------------------------------------------------------- attention
+
+@given(st.integers(1, 2), st.sampled_from([8, 16, 24]),
+       st.sampled_from([4, 8, 16]), st.integers(1, 2))
+@settings(**SET)
+def test_chunked_attention_matches_dense(B, S, chunk, K):
+    """Online-softmax chunked attention == dense masked attention for any
+    chunking (the memory optimization must be exact)."""
+    H, Dh = 2 * K, 16
+    k = jax.random.PRNGKey(B * 1000 + S)
+    q = jax.random.normal(k, (B, S, H, Dh))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, Dh))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, Dh))
+    got = chunked_attention(q, kk, v, q_offset=0, causal=True, chunk=chunk)
+
+    # dense reference
+    G = H // K
+    qr = q.reshape(B, S, K, G, Dh)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qr, kk) / np.sqrt(Dh)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bkgqc,bckd->bqkgd", p, v).reshape(B, S, H, Dh)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

@@ -1,0 +1,186 @@
+"""Integration tests: training makes progress; explicit-DDP paths agree;
+checkpoint round-trips; data pipeline determinism."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.data.synthetic import make_batch_fn, token_batch
+from repro.models.registry import build_model
+from repro.train import checkpoint as ckpt
+from repro.train import state as st
+from repro.train.step import make_eval_step, make_train_step
+
+
+def _train(arch, steps, *, opt="lars", lr=2.0, comm="xla", mesh=None,
+           batch=8, seq=64, warmup=None):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    mesh = mesh or jax.make_mesh((1, 1), ("data", "model"))
+    sched = make_schedule(ScheduleConfig(
+        base_lr=lr, warmup_steps=warmup if warmup is not None else steps // 8,
+        total_steps=steps, decay="poly2"))
+    step = jax.jit(make_train_step(model, lars.OptConfig(kind=opt), sched,
+                                   mesh=mesh, comm=comm))
+    bf = make_batch_fn(cfg, InputShape("t", "train", seq, batch), mesh=mesh)
+    s = st.init_state(model, 0, opt_kind=opt)
+    losses = []
+    for i in range(steps):
+        s, m = step(s, bf(s.step))
+        losses.append(float(m["loss"]))
+    return losses, s
+
+
+def test_loss_decreases_lm():
+    losses, _ = _train("qwen1.5-0.5b", 40)
+    assert losses[-1] < losses[0] - 0.3, losses[::8]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_loss_decreases_resnet():
+    losses, _ = _train("resnet50", 30, lr=0.5, batch=16, seq=0)
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+
+
+def test_lars_stable_where_sgd_diverges_high_lr():
+    """The paper's motivation: LARS keeps very-high-lr training finite."""
+    lars_losses, _ = _train("qwen1.5-0.5b", 12, opt="lars", lr=30.0,
+                            warmup=0)
+    assert all(np.isfinite(l) for l in lars_losses)
+    assert lars_losses[-1] < 3 * lars_losses[0] + 10
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    _, s = _train("qwen1.5-0.5b", 3)
+    ckpt.save(s, str(tmp_path))
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    model = build_model(cfg)
+    template = st.init_state(model, 123)
+    restored = ckpt.load(template, str(tmp_path))
+    assert int(restored.step) == int(s.step)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 s.params, restored.params)
+
+
+def test_data_pipeline_deterministic_and_step_dependent():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    b1 = token_batch(cfg, batch=4, seq=32, step=jnp.int32(5), seed=0)
+    b2 = token_batch(cfg, batch=4, seq=32, step=jnp.int32(5), seed=0)
+    b3 = token_batch(cfg, batch=4, seq=32, step=jnp.int32(6), seed=0)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_lcg_stream_is_learnable_structure():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    b = token_batch(cfg, batch=2, seq=64, step=jnp.int32(0), seed=0,
+                    kind="lcg")
+    t = np.asarray(b["tokens"])
+    pred = (5 * t[:, :-1] + 7) % cfg.vocab_size
+    match = (pred == t[:, 1:]).mean()
+    assert match > 0.85      # 5% noise
+
+
+def test_eval_step_runs():
+    cfg = get_config("resnet50").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    s = st.init_state(model, 0)
+    from repro.data.synthetic import prototype_imagenet
+    batch = prototype_imagenet(cfg, batch=8, step=jnp.int32(0))
+    ev = jax.jit(make_eval_step(model, mesh=mesh))
+    m = ev(s.params, batch, s.bn_state)
+    assert 0.0 <= float(m["acc"]) <= 1.0
+
+
+DDP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.configs.shapes import InputShape
+from repro.models.registry import build_model
+from repro.train import state as st
+from repro.train.step import make_train_step
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.data.synthetic import make_batch_fn
+
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+cfg = get_config("resnet50").reduced()
+model = build_model(cfg)
+sched = make_schedule(ScheduleConfig(base_lr=0.2, warmup_steps=1,
+                                     total_steps=20))
+bf = make_batch_fn(cfg, InputShape("t", "train", 0, 16), mesh=mesh)
+res = {}
+for comm in ("naive", "bucketed"):
+    s = st.init_state(model, 0)
+    step = jax.jit(make_train_step(model, lars.OptConfig(kind="lars"),
+                                   sched, mesh=mesh, comm=comm,
+                                   bucket_mb=0.25))
+    for i in range(3):
+        s, m = step(s, bf(s.step))
+    res[comm] = jax.tree.leaves(s.params)[0]
+np.testing.assert_allclose(np.asarray(res["naive"]),
+                           np.asarray(res["bucketed"]), rtol=1e-5)
+print("DDP-OK")
+"""
+
+
+def test_bucketed_allreduce_equals_naive_8dev():
+    """Paper §III-C: bucketing is a pure comm-layout change — training must
+    be bit-compatible with per-tensor allreduce. Runs on 8 host devices in a
+    subprocess (device count locks at jax init)."""
+    r = subprocess.run([sys.executable, "-c", DDP_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "DDP-OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_lamb_trains():
+    """Beyond-paper: LAMB (LARS lineage) on the LM family."""
+    losses, _ = _train("qwen1.5-0.5b", 25, opt="lamb", lr=0.01)
+    assert losses[-1] < losses[0] - 0.2, losses[::5]
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=N over the same examples == one full-batch step."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
+                                         total_steps=10))
+    bf = make_batch_fn(cfg, InputShape("t", "train", 32, 8), mesh=mesh)
+    b = bf(jnp.int32(0))
+    outs = []
+    for ga in (1, 4):
+        s = st.init_state(model, 0)
+        step = jax.jit(make_train_step(model, lars.OptConfig(kind="lars"),
+                                       sched, mesh=mesh, grad_accum=ga))
+        s, _ = step(s, b)
+        outs.append(s.params)
+    # bf16 microbatch grads + LARS trust-ratio amplification leave a
+    # small numerical gap vs the single full-batch step
+    jax.tree.map(lambda a, c: np.testing.assert_allclose(a, c, atol=3e-4),
+                 outs[0], outs[1])
+
+
+def test_lamb_trust_ratio_is_norm_ratio():
+    params = {"w": jnp.full((4, 4), 2.0)}
+    grads = {"w": jnp.full((4, 4), 1.0)}
+    mom = lars.init_momentum(params, "lamb")
+    cfg = lars.OptConfig(kind="lamb", momentum=0.0, beta2=0.0,
+                         weight_decay=0.0, eps=0.0)
+    p2, m2 = lars.update(params, grads, mom, 0.5, cfg)
+    # update u = g/|g| elementwise = 1; ratio = |w|/|u| = 2; step = lr*2*1
+    np.testing.assert_allclose(p2["w"], 2.0 - 0.5 * 2.0, rtol=1e-5)
+    assert int(m2["count"]) == 1
