@@ -1,0 +1,19 @@
+# Convenience wrappers around the repo's canonical commands (ROADMAP.md).
+PY := PYTHONPATH=src python
+
+.PHONY: test test-tier1 bench comm-table dryrun
+
+test:            ## tier-1 verify: the full suite, fail fast
+	$(PY) -m pytest -x -q
+
+test-tier1:      ## fast in-process subset (no 8-device subprocesses)
+	$(PY) -m pytest -x -q -m tier1
+
+bench:           ## paper-table benchmarks, quick variant
+	$(PY) -m benchmarks.run --quick
+
+comm-table:      ## predicted all-reduce time per schedule, production meshes
+	$(PY) -m repro.launch.dryrun --comm-table
+
+dryrun:          ## full multi-pod compile dry-run (slow)
+	$(PY) -m repro.launch.dryrun

@@ -17,6 +17,7 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -313,6 +314,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, time
 from jax.sharding import PartitionSpec as P
 from repro.core import bucketing, ddp
+from repro.core.compat import shard_map
 mesh = jax.make_mesh((8,), ("data",))
 ks = jax.random.split(jax.random.PRNGKey(0), 120)
 tree = {f"t{i}": jax.random.normal(ks[i], ((i % 7 + 1) * 96, 128))
@@ -325,17 +327,19 @@ def bucketed(t):
                                plan=plan)
 spec = jax.tree.map(lambda _: P(), tree)
 for name, fn in [("naive", naive), ("bucketed", bucketed)]:
-    f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(spec,),
-                              out_specs=spec))
+    f = jax.jit(shard_map(fn, mesh=mesh, in_specs=(spec,),
+                          out_specs=spec))
     jax.block_until_ready(f(tree))
     t0 = time.perf_counter()
     for _ in range(5):
         jax.block_until_ready(f(tree))
     print(f"{name},{(time.perf_counter()-t0)/5*1e6:.0f}")
 """
+    # inherit the parent env: JAX_PLATFORMS=cpu must reach the child or
+    # jax probes for TPUs for minutes at import
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     res = dict(line.split(",") for line in r.stdout.strip().splitlines()
                if "," in line)
     if "naive" in res and "bucketed" in res:
@@ -356,11 +360,89 @@ for name, fn in [("naive", naive), ("bucketed", bucketed)]:
              f"FAILED: {r.stderr[-200:]}")
 
 
+def bench_comm_schedules(quick: bool):
+    """Sweep the registered collective schedules (repro/comm/) on 8 host
+    devices. Schedules are interleaved round-robin within each timing round
+    and the median per schedule is reported — wall times on this box drift
+    tens of percent between processes, so never compare across runs. The
+    derived column projects each schedule onto the production meshes with
+    the alpha-beta model (single-host psum is memcpy-bound and can't show
+    topology wins end-to-end)."""
+    import subprocess
+    import sys
+
+    from repro.comm import cost
+
+    n_tensors, rounds = (30, 3) if quick else (80, 7)
+    t0 = time.perf_counter()
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import comm
+from repro.core import bucketing, ddp
+from repro.core.compat import shard_map
+
+N_TENSORS = %d
+ROUNDS = %d
+ks = jax.random.split(jax.random.PRNGKey(0), N_TENSORS)
+tree = {f"t{i}": jax.random.normal(ks[i], ((i %% 7 + 1) * 96, 128))
+        for i in range(N_TENSORS)}
+plan = bucketing.make_plan(tree, bucket_mb=1.0)
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+spec = jax.tree.map(lambda _: P(), tree)
+
+def mk(s):
+    def fn(t):
+        return ddp.allreduce_grads(t, strategy=s, axes=("pod", "data"),
+                                   plan=plan)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec))
+
+fns = {s: mk(s) for s in comm.available()}
+for f in fns.values():
+    jax.block_until_ready(f(tree))       # compile + warm
+times = {s: [] for s in fns}
+for r in range(ROUNDS):                  # interleave within each round
+    for s, f in fns.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(tree))
+        times[s].append(time.perf_counter() - t0)
+print("n_buckets," + str(plan.n_buckets))
+for s in fns:
+    print(f"{s},{float(np.median(times[s])) * 1e6:.0f}")
+""" % (n_tensors, rounds)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=600,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    res = dict(line.split(",") for line in r.stdout.strip().splitlines()
+               if "," in line)
+    if not res:
+        emit("comm.schedules", (time.perf_counter() - t0) * 1e6,
+             f"FAILED: {r.stderr[-200:]}")
+        return
+    # wire bytes: ddp defaults to a bf16 wire (2 B/elem), matching the
+    # bucket plan's dtype_bytes and report.comm_section's convention
+    grad_bytes = sum((i % 7 + 1) * 96 * 128 * 2 for i in range(n_tensors))
+    nb = int(res.pop("n_buckets", 1))
+    for s in sorted(res):
+        p1 = cost.predict(s, ("data",), (16,), grad_bytes, n_buckets=nb)
+        p2 = cost.predict(s, ("pod", "data"), (2, 16), grad_bytes,
+                          n_buckets=nb)
+        emit(f"comm.schedule_{s}", float(res[s]),
+             f"hostCPU median of {rounds} interleaved rounds; v5e "
+             f"alpha-beta: 16x16={p1.time_s*1e6:.0f}us "
+             f"2x16x16={p2.time_s*1e6:.0f}us")
+
+
 ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_lars_ablation, bench_smoothing_ablation,
        bench_bn_momentum_ablation,
        bench_kernel_batched_norm, bench_kernel_smoothed_xent,
-       bench_kernel_lars_update, bench_comm_bucketing]
+       bench_kernel_lars_update, bench_comm_bucketing,
+       bench_comm_schedules]
 
 
 def main() -> None:

@@ -1,0 +1,11 @@
+"""Collective-schedule subsystem (paper §III-C and its successors).
+
+Decomposes gradient all-reduce into composable schedules over the mesh's
+data-parallel axes — ``psum`` (fused baseline), ``ring``, ``hierarchical``
+(Akiba-style intra/inter), ``2d_torus`` (Sony-style) — each paired with an
+alpha-beta cost model that predicts wall time from mesh shape, payload
+bytes, and the link constants in ``launch/mesh.py``. See docs/comm.md.
+"""
+from repro.comm.registry import available, get_schedule  # noqa: F401
+from repro.comm.cost import (  # noqa: F401
+    CostBreakdown, Link, predict, predict_table)

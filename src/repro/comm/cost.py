@@ -1,0 +1,130 @@
+"""Alpha-beta wall-time models for the registered collective schedules.
+
+Each message on a link costs ``alpha + bytes / bw`` (latency + serialized
+payload); a schedule is a serialized sequence of phases, each a set of
+messages on one link class. Link constants live in ``repro.launch.mesh``:
+``data``/``model`` hops ride the intra-pod v5e ICI, the ``pod`` axis rides
+the slower cross-pod DCI — which is exactly why hierarchical/2d-torus win:
+they shrink cross-pod traffic by the intra-axis size before it touches the
+slow link.
+
+Bucketing multiplies the per-phase message count by ``n_buckets`` (alpha
+term) while the total wire bytes are unchanged — the paper §III-C.1
+trade-off (fewer messages vs overlap granularity) made predictable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+from repro.launch.mesh import DCI_ALPHA, DCI_BW, ICI_ALPHA, ICI_BW
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    alpha: float            # per-message latency, seconds
+    bw: float               # bytes/second per device
+
+
+ICI = Link(ICI_ALPHA, ICI_BW)
+DCI = Link(DCI_ALPHA, DCI_BW)
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    name: str
+    messages: int           # serialized messages per bucket
+    wire_bytes: float       # bytes per device per bucket
+    link: Link
+
+    def time_s(self, n_buckets: int) -> float:
+        return n_buckets * (self.messages * self.link.alpha
+                            + self.wire_bytes / self.link.bw)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    schedule: str
+    time_s: float
+    n_messages: int         # total messages (all buckets)
+    wire_bytes: float       # total bytes/device on the wire
+    phases: Tuple[Phase, ...]
+
+
+def default_links(axes: Sequence[str]) -> Dict[str, Link]:
+    return {a: (DCI if a == "pod" else ICI) for a in axes}
+
+
+def _slowest(links: Sequence[Link]) -> Link:
+    return min(links, key=lambda l: l.bw)
+
+
+def predict(schedule: str, axes: Sequence[str], sizes: Sequence[int],
+            payload_bytes: float, *, n_buckets: int = 1,
+            links: Dict[str, Link] = None) -> CostBreakdown:
+    """Predicted wall time of one all-reduce of ``payload_bytes`` (total,
+    pre-bucketing) over mesh axes ``axes`` with per-axis ``sizes``."""
+    assert len(axes) == len(sizes)
+    links = links or default_links(axes)
+    B = payload_bytes / n_buckets            # per-bucket payload
+    ph = []
+
+    def ring_ar(tag, bytes_in, n, link):
+        if n > 1:
+            ph.append(Phase(f"ring-ar[{tag}]", 2 * (n - 1),
+                            2 * bytes_in * (n - 1) / n, link))
+
+    if schedule in ("psum", "bucketed"):
+        d = 1
+        for s in sizes:
+            d *= s
+        if d > 1:
+            ring_ar("fused", B, d, _slowest([links[a] for a in axes]))
+    elif schedule == "ring":
+        for a, n in zip(reversed(axes), reversed(sizes)):
+            ring_ar(a, B, n, links[a])
+    elif schedule in ("hierarchical", "2d_torus"):
+        intra, n = axes[-1], sizes[-1]
+        shard = B / max(n, 1)
+        if n > 1:
+            ph.append(Phase(f"ring-rs[{intra}]", n - 1,
+                            B * (n - 1) / n, links[intra]))
+        outer = list(zip(axes[:-1], sizes[:-1]))
+        if schedule == "hierarchical":
+            p = 1
+            for _, s in outer:
+                p *= s
+            if p > 1:
+                ring_ar("pods-fused", shard, p,
+                        _slowest([links[a] for a, _ in outer]))
+        else:
+            for a, s in reversed(outer):
+                ring_ar(a, shard, s, links[a])
+        if n > 1:
+            ph.append(Phase(f"ring-ag[{intra}]", n - 1,
+                            B * (n - 1) / n, links[intra]))
+    else:
+        raise KeyError(f"no cost model for schedule {schedule!r}")
+
+    return CostBreakdown(
+        schedule=schedule,
+        time_s=sum(p.time_s(n_buckets) for p in ph),
+        n_messages=sum(p.messages for p in ph) * n_buckets,
+        wire_bytes=sum(p.wire_bytes for p in ph) * n_buckets,
+        phases=tuple(ph),
+    )
+
+
+def predict_table(axes: Sequence[str], sizes: Sequence[int],
+                  payload_bytes: float, *, n_buckets: int = 1):
+    """One CostBreakdown per registered schedule, fastest first. A schedule
+    registered without a cost model here is skipped (it still trains)."""
+    from repro.comm.registry import available
+    rows = []
+    for s in available():
+        try:
+            rows.append(predict(s, axes, sizes, payload_bytes,
+                                n_buckets=n_buckets))
+        except KeyError:
+            pass
+    return sorted(rows, key=lambda r: r.time_s)

@@ -1,0 +1,87 @@
+"""Ring collective primitives over ``ppermute`` (paper §III-C lineage).
+
+Every composite schedule in ``repro.comm.schedules`` is built from three
+primitives operating on flat 1-D buffers *inside* ``shard_map``:
+
+  ring_reduce_scatter  — n-1 shift-and-add steps; device r ends holding the
+                         fully reduced chunk ``(r+1) % n`` of the buffer.
+  ring_all_gather      — n-1 shift-and-deposit steps; inverse layout walk,
+                         reconstructs the full buffer from per-device chunks.
+  ring_all_reduce      — reduce-scatter + all-gather = the classic
+                         bandwidth-optimal ring (2(n-1) messages of B/n).
+
+Chunk convention: the buffer is zero-padded to ``n * c`` elements and viewed
+as ``(n, c)`` chunk rows. At reduce-scatter step ``s`` device ``r`` sends the
+partial sum for chunk ``(r - s) % n`` to ``r + 1`` and folds the incoming
+partial into chunk ``(r - 1 - s) % n``. The fold (receive + local-chunk add)
+is the schedule's inner loop; ``step_fn`` lets the Pallas ring-step kernel
+(`repro.comm.ring_kernel`) replace the jnp gather-add.
+
+All primitives are degenerate-safe: a 1-sized axis returns the input
+unchanged, so schedules compose over meshes with trivial axes (e.g. the
+local ``("data", "model")`` mesh with model=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compat import axis_size
+
+
+def _fwd_perm(n):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def default_step_fn(recv, chunks, k):
+    """Fold the received partial into local chunk ``k``: recv + chunks[k]."""
+    return recv + jnp.take(chunks, k, axis=0)
+
+
+def _as_chunks(x, n, pad_to: int = 1):
+    """View 1-D ``x`` as (n, c) zero-padded chunk rows; c % pad_to == 0."""
+    L = x.shape[0]
+    c = -(-L // (n * pad_to)) * pad_to
+    if n * c != L:
+        x = jnp.pad(x, (0, n * c - L))
+    return x.reshape(n, c)
+
+
+def ring_reduce_scatter(x, axis, *, step_fn=None, pad_to: int = 1):
+    """Returns (shard, orig_len): device r holds the summed chunk (r+1)%n."""
+    n = axis_size(axis)
+    L = x.shape[0]
+    if n == 1:
+        return x, L
+    step_fn = step_fn or default_step_fn
+    r = jax.lax.axis_index(axis)
+    chunks = _as_chunks(x, n, pad_to)
+    perm = _fwd_perm(n)
+    acc = jnp.take(chunks, r, axis=0)
+    for s in range(n - 1):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        acc = step_fn(acc, chunks, (r - 1 - s) % n)
+    return acc, L
+
+
+def ring_all_gather(shard, axis, orig_len: int):
+    """Inverse of ``ring_reduce_scatter``'s layout: rebuild the flat buffer
+    (device r starts holding chunk (r+1)%n), truncated to ``orig_len``."""
+    n = axis_size(axis)
+    if n == 1:
+        return shard
+    r = jax.lax.axis_index(axis)
+    perm = _fwd_perm(n)
+    out = jnp.zeros((n,) + shard.shape, shard.dtype)
+    out = out.at[(r + 1) % n].set(shard)
+    cur = shard
+    for t in range(1, n):
+        cur = jax.lax.ppermute(cur, axis, perm)
+        out = out.at[(r - t + 1) % n].set(cur)
+    return out.reshape(-1)[:orig_len]
+
+
+def ring_all_reduce(x, axis, *, step_fn=None, pad_to: int = 1):
+    """Bandwidth-optimal single-axis ring all-reduce (sum)."""
+    shard, L = ring_reduce_scatter(x, axis, step_fn=step_fn, pad_to=pad_to)
+    return ring_all_gather(shard, axis, L)

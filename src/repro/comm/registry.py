@@ -1,0 +1,40 @@
+"""Name -> collective-schedule registry.
+
+``core.ddp`` resolves its ``strategy`` knob here, so adding a new topology
+is: write the schedule in ``schedules.py``, decorate with ``@register``,
+and it is immediately selectable from configs, the CLI, the dry-run cost
+table, and the benchmark sweep.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+_SCHEDULES: Dict[str, Callable] = {}
+
+# legacy ddp strategy names that map onto registered schedules
+ALIASES = {"bucketed": "psum"}
+
+
+def register(name: str):
+    def deco(fn: Callable) -> Callable:
+        assert name not in _SCHEDULES, f"duplicate schedule {name!r}"
+        _SCHEDULES[name] = fn
+        return fn
+    return deco
+
+
+def get_schedule(name: str) -> Callable:
+    name = ALIASES.get(name, name)
+    # importing schedules populates the registry lazily (avoids import cycle)
+    if not _SCHEDULES:
+        from repro.comm import schedules  # noqa: F401
+    if name not in _SCHEDULES:
+        raise KeyError(
+            f"unknown comm schedule {name!r}; available: {available()}")
+    return _SCHEDULES[name]
+
+
+def available() -> List[str]:
+    if not _SCHEDULES:
+        from repro.comm import schedules  # noqa: F401
+    return sorted(_SCHEDULES)

@@ -1,0 +1,80 @@
+"""Composable all-reduce schedules over the data-parallel mesh axes.
+
+A *schedule* is ``fn(buf, axes, *, use_kernel=False, interpret=None) -> buf``
+run inside ``shard_map``: it receives one flat (replicated-shape) bucket
+buffer and the ordered tuple of mesh axis names to reduce over, and returns
+the elementwise SUM over every device in those axes (callers divide for the
+mean). Axis convention, matching ``launch/mesh.py``: outer/slower axes first
+— ``("pod", "data")`` on the 2-pod production mesh — so ``axes[-1]`` is the
+innermost, best-connected axis and is where the scatter rings run.
+
+Registered schedules:
+
+  psum         — one fused XLA all-reduce over all axes (baseline; XLA picks
+                 the topology).
+  ring         — sequential bandwidth-optimal ring per axis (reduce-scatter
+                 + all-gather via ``ppermute``), innermost axis first.
+  hierarchical — Akiba-style (arXiv:1711.04325): ring reduce-scatter within
+                 ``axes[-1]``, one fused psum across the outer (cross-pod)
+                 axes on the 1/n shard, ring all-gather back. Cross-pod
+                 traffic shrinks by the intra-axis size.
+  2d_torus     — Sony-style (arXiv:1811.05233): ring reduce-scatter on
+                 ``axes[-1]``, ring all-reduce of the shard along each
+                 orthogonal axis, ring all-gather back. Same wire bytes as
+                 hierarchical but every phase is explicit ppermute rings.
+
+``use_kernel=True`` swaps the reduce-scatter inner fold for the Pallas
+ring-step kernel (``repro.comm.ring_kernel``), which requires CHUNK-aligned
+chunk rows — the schedules pass ``pad_to=CHUNK`` to the primitives.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.bucketing import CHUNK
+from repro.comm import primitives as prim
+from repro.comm.registry import register
+
+
+def _step_fn(use_kernel: bool, interpret):
+    if not use_kernel:
+        return prim.default_step_fn, 1
+    from repro.comm.ring_kernel import kernel_step_fn
+    return kernel_step_fn(interpret), CHUNK
+
+
+@register("psum")
+def psum_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
+    return jax.lax.psum(buf, tuple(axes))
+
+
+@register("ring")
+def ring_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    for axis in reversed(axes):          # innermost (fastest) axis first
+        buf = prim.ring_all_reduce(buf, axis, step_fn=step_fn, pad_to=pad_to)
+    return buf
+
+
+@register("hierarchical")
+def hierarchical_schedule(buf, axes, *, use_kernel: bool = False,
+                          interpret=None):
+    intra, inter = axes[-1], tuple(axes[:-1])
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    shard, n = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
+                                        pad_to=pad_to)
+    if inter:
+        shard = jax.lax.psum(shard, inter)
+    return prim.ring_all_gather(shard, intra, n)
+
+
+@register("2d_torus")
+def torus_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
+    intra, ortho = axes[-1], tuple(axes[:-1])
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    shard, n = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
+                                        pad_to=pad_to)
+    for axis in reversed(ortho):
+        shard = prim.ring_all_reduce(shard, axis, step_fn=step_fn,
+                                     pad_to=pad_to)
+    return prim.ring_all_gather(shard, intra, n)

@@ -13,6 +13,23 @@ from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
+class CommConfig:
+    """Gradient-communication knob (paper §III-C; docs/comm.md).
+
+    ``strategy``: 'xla' (GSPMD inserts collectives) | 'naive' (per-tensor
+    psum) | any schedule in ``repro.comm.registry`` — 'bucketed'/'psum',
+    'ring', 'hierarchical', '2d_torus' — applied per static bucket group.
+    """
+    strategy: str = "xla"
+    bucket_mb: float = 4.0       # the paper's "several megabytes"
+    wire_dtype: str = "bf16"     # bf16 | f32 on the wire (paper §IV)
+    use_kernel: bool = False     # Pallas ring-step fold (comm/ring_kernel)
+
+    def __post_init__(self):
+        assert self.wire_dtype in ("bf16", "f32"), self.wire_dtype
+
+
+@dataclass(frozen=True)
 class MoEConfig:
     n_routed: int = 0          # number of routed experts
     top_k: int = 0             # experts per token

@@ -81,17 +81,23 @@ def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2
 
 
 def pack(tree, plan: BucketPlan, dtype=jnp.bfloat16) -> List[jax.Array]:
-    """Pytree -> list of flat per-bucket buffers (paper's allreduce payloads)."""
+    """Pytree -> list of flat per-bucket buffers (paper's allreduce payloads).
+
+    Staged in f32: XLA's CPU backend lowers bf16 concatenate /
+    dynamic-update-slice to scalar loops (~15x slower than f32), so the
+    buffer is assembled in f32 and cast to the wire dtype once per bucket —
+    the payload that crosses the links is still ``dtype``."""
+    stage = jnp.float32 if dtype == jnp.bfloat16 else dtype
     leaves = list(reversed(jax.tree_util.tree_leaves(tree)))
     assert len(leaves) == plan.n_tensors
     bufs = [[] for _ in plan.bucket_sizes]
     for slot, leaf in zip(plan.slots, leaves):
-        flat = leaf.reshape(-1).astype(dtype)
+        flat = leaf.reshape(-1).astype(stage)
         if slot.padded != slot.size:
             flat = jnp.concatenate(
-                [flat, jnp.zeros(slot.padded - slot.size, dtype)])
+                [flat, jnp.zeros(slot.padded - slot.size, stage)])
         bufs[slot.bucket].append(flat)
-    return [jnp.concatenate(b) for b in bufs]
+    return [jnp.concatenate(b).astype(dtype) for b in bufs]
 
 
 def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):

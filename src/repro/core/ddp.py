@@ -7,14 +7,15 @@ collective pattern is explicit and controllable:
                  the paper attacks: "allreduce per each layer leads to large
                  overhead ... if the data size of gradient is small").
 * ``bucketed`` — the paper's optimization: gradients are packed into
-                 several-MB flat bf16 buckets built in backward-completion
-                 order (static layer groups, §III-C.2) and one psum is
+                 several-MB flat buckets built in backward-completion order
+                 (static layer groups, §III-C.2) and one collective is
                  issued per bucket as soon as its group's backward is done.
-                 XLA's latency-hiding scheduler overlaps these with the
-                 remaining backward compute (the TPU analogue of the paper's
-                 manual NCCL scheduling).
-* ``xla``      — no explicit collectives; GSPMD inserts them (used by the
-                 tensor-parallel configs where grads are already partial).
+* any name in ``repro.comm.registry`` (``psum``, ``ring``, ``hierarchical``,
+  ``2d_torus``) — same bucket plan, but the per-bucket collective is the
+  named composable schedule instead of a fused psum (``bucketed`` is an
+  alias for ``psum``). See docs/comm.md.
+* ``xla``      — handled in train/step.py: no explicit collectives; GSPMD
+                 inserts them (the tensor-parallel configs).
 """
 from __future__ import annotations
 
@@ -24,29 +25,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bucketing
-from repro.core.precision import grads_to_comm, grads_to_master
+from repro.core.compat import axes_size
+from repro.core.precision import grads_to_comm
 
 
 def allreduce_grads(grads, *, strategy: str, axes: Sequence[str],
-                    plan: "bucketing.BucketPlan" = None):
+                    plan: "bucketing.BucketPlan" = None,
+                    comm_dtype=jnp.bfloat16, use_kernel: bool = False,
+                    interpret: bool = None):
     """Reduce-mean gradients over the data-parallel mesh axes.
-    Must be called inside shard_map. Returns fp32 gradients."""
-    n = 1
-    for a in axes:
-        n *= jax.lax.axis_size(a)
+    Must be called inside shard_map. Returns fp32 gradients.
+
+    ``comm_dtype`` is the wire dtype (paper §IV: bf16; f32 reproduces the
+    full-precision baseline); ``use_kernel`` swaps the ring schedules' inner
+    fold for the Pallas ring-step kernel."""
+    n = axes_size(axes)
 
     if strategy == "naive":
-        comm = grads_to_comm(grads)                     # bf16 on the wire
+        comm = grads_to_comm(grads, dtype=comm_dtype)   # half on the wire
         red = jax.tree.map(lambda g: jax.lax.psum(g, tuple(axes)), comm)
         return jax.tree.map(lambda g: g.astype(jnp.float32) / n, red)
 
-    if strategy == "bucketed":
-        assert plan is not None
-        bufs = bucketing.pack(grads, plan, dtype=jnp.bfloat16)
-        # one collective per static bucket group, in backward-completion
-        # order; payload is the paper's "several megabytes"
-        bufs = [jax.lax.psum(b, tuple(axes)) for b in bufs]
-        red = bucketing.unpack(bufs, plan, dtype=jnp.float32)
-        return jax.tree.map(lambda g: g / n, red)
-
-    raise ValueError(strategy)
+    from repro.comm import get_schedule
+    schedule = get_schedule(strategy)
+    assert plan is not None
+    bufs = bucketing.pack(grads, plan, dtype=comm_dtype)
+    # one collective per static bucket group, in backward-completion
+    # order; payload is the paper's "several megabytes"
+    bufs = [schedule(b, tuple(axes), use_kernel=use_kernel,
+                     interpret=interpret) for b in bufs]
+    red = bucketing.unpack(bufs, plan, dtype=jnp.float32)
+    return jax.tree.map(lambda g: g / n, red)

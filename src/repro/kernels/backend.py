@@ -1,0 +1,23 @@
+"""Pallas execution-mode policy shared by every kernel wrapper.
+
+This container is CPU-only, so kernels run in interpret mode; on a real TPU
+backend they compile. ``REPRO_PALLAS_INTERPRET=0|1`` force-overrides either
+way (useful for debugging a compiled kernel in interpret mode on TPU, or
+asserting the compiled path in CI).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def resolve_interpret(backend: str = None) -> bool:
+    """True -> run pallas_call in interpret mode for ``backend`` (default:
+    the current default jax backend)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    if backend is None:
+        backend = jax.default_backend()
+    return backend != "tpu"

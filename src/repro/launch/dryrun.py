@@ -111,7 +111,15 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--tag", default="baseline",
                     help="experiment tag (baseline / perf-iteration name)")
+    ap.add_argument("--comm-table", action="store_true",
+                    help="print the per-schedule predicted comm-time table "
+                         "for the production meshes and exit (no compiles)")
     args = ap.parse_args()
+
+    if args.comm_table:
+        from repro.launch.report import comm_section
+        print(comm_section())
+        return
 
     archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")
     meshes = {"single": [False], "multi": [True],

@@ -29,4 +29,10 @@ def make_local_mesh(model_parallel: int = 1):
 # TPU v5e hardware constants (roofline targets; see EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip
-ICI_BW = 50e9                 # bytes/s per link
+ICI_BW = 50e9                 # bytes/s per link (intra-pod 'data'/'model' hops)
+ICI_ALPHA = 1e-6              # per-message ICI latency, seconds
+
+# Cross-pod ('pod' axis) data-center interconnect: ~order slower than ICI —
+# the asymmetry the hierarchical/2d-torus schedules exploit (comm/cost.py).
+DCI_BW = 6.25e9               # bytes/s per host link
+DCI_ALPHA = 10e-6             # per-message DCI latency, seconds

@@ -115,14 +115,50 @@ def compare_table(base_recs, opt_recs, mesh="16x16") -> str:
     return "\n".join(rows)
 
 
+PRODUCTION_DP_AXES = {
+    # mesh tag -> (gradient all-reduce axes, their sizes); 'model' is TP
+    "16x16": (("data",), (16,)),
+    "2x16x16": (("pod", "data"), (2, 16)),
+}
+
+
+def comm_section(payload_bytes: float = None, bucket_mb: float = 4.0) -> str:
+    """Per-schedule alpha-beta predicted comm time for the production
+    meshes (repro/comm/cost.py), fastest first within each mesh. Default
+    payload: the ResNet-50 gradient in bf16 (paper §III-C/§IV)."""
+    import math
+
+    from repro.comm import cost
+    from repro.configs import get_config, param_count
+
+    if payload_bytes is None:
+        payload_bytes = param_count(get_config("resnet50")) * 2   # bf16
+    n_buckets = max(1, math.ceil(payload_bytes / (bucket_mb * 2 ** 20)))
+    rows = [f"### Predicted all-reduce time, {fmt_b(payload_bytes)} "
+            f"gradient in {n_buckets} buckets\n",
+            "| mesh | schedule | msgs | wire/dev | predicted t | phases |",
+            "|---|---|---|---|---|---|"]
+    for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
+        for r in cost.predict_table(axes, sizes, payload_bytes,
+                                    n_buckets=n_buckets):
+            phases = " + ".join(p.name for p in r.phases) or "—"
+            rows.append(f"| {tag} | {r.schedule} | {r.n_messages} "
+                        f"| {fmt_b(r.wire_bytes)} | {fmt_t(r.time_s)} "
+                        f"| {phases} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun/baseline")
     ap.add_argument("--compare", default=None,
                     help="second records dir: emit baseline-vs-optimized")
     ap.add_argument("--section", default="roofline",
-                    choices=["roofline", "dryrun"])
+                    choices=["roofline", "dryrun", "comm"])
     args = ap.parse_args()
+    if args.section == "comm":
+        print(comm_section())
+        return
     recs = load(args.dir)
     if args.compare:
         print(compare_table(recs, load(args.compare)))

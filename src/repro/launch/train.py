@@ -37,8 +37,11 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="lars",
                 choices=["lars", "sgdm", "lamb"])
     ap.add_argument("--grad-accum", type=int, default=1)
+    from repro.comm import available
+    from repro.comm.registry import ALIASES
     ap.add_argument("--comm", default="xla",
-                    choices=["xla", "naive", "bucketed"])
+                    choices=["xla", "naive"] + sorted(
+                        set(available()) | set(ALIASES)))
     ap.add_argument("--bucket-mb", type=float, default=4.0)
     ap.add_argument("--lr", type=float, default=None,
                     help="default: linear-scaling rule from batch size")

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.models.common import PD, constrain, dense_pd, dp_axes, \
     rms_norm, rope
 
@@ -40,9 +41,9 @@ def _attend(q, k, v, cfg, mesh, *, causal: bool, window: int = 0):
             spec = P(dp, None, "model", None)
             fn = lambda ql, kl, vl: flash_attention_bshd(
                 ql, kl, vl, causal=causal, window=window)
-            return jax.shard_map(fn, mesh=mesh,
-                                 in_specs=(spec, spec, spec),
-                                 out_specs=spec)(q, k, v)
+            return shard_map(fn, mesh=mesh,
+                             in_specs=(spec, spec, spec),
+                             out_specs=spec)(q, k, v)
         # uneven heads: fall through to the chunked path
     return chunked_attention(q, k, v, q_offset=0, causal=causal,
                              window=window, chunk=cfg.attn_chunk)

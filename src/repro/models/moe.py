@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.models.common import PD, dense_pd
 
 
@@ -95,7 +96,7 @@ def moe_apply(p, x, cfg, mesh, *, decode: bool):
         in_spec = P(dp, "model", None)
         fn = partial(_moe_a2a, cfg=cfg, tp=tp, dp=dp)
     wspec = P("model", None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         fn, mesh=mesh,
         in_specs=(in_spec, P(None, None), wspec, wspec, wspec),
         out_specs=(in_spec, P()),

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.models.common import PD
 
 STAGES = ((3, 64), (4, 128), (6, 256), (3, 512))  # (blocks, base width)
@@ -89,7 +90,7 @@ def _bn(x, p, st, *, train: bool, momentum: float, eps=1e-5, mesh=None,
                 m2 = jax.lax.pmean(m, dp_axes(mesh))
                 v2 = jax.lax.pmean(v + m * m, dp_axes(mesh)) - m2 * m2
                 return m2, v2
-            mean, var = jax.shard_map(
+            mean, var = shard_map(
                 stats, mesh=mesh, in_specs=spec,
                 out_specs=(P(), P()))(x)
         new_st = {

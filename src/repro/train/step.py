@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bucketing, ddp, lars
+from repro.configs.base import CommConfig
+from repro.core import bucketing, compat, ddp, lars
 from repro.core.label_smoothing import IGNORE, smoothed_xent, top1_accuracy
 from repro.core.precision import cast_to_compute
 from repro.train.state import TrainState
@@ -72,7 +73,15 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     comm_dtype='bf16' (paper §IV): gradients are taken w.r.t. the bf16
     compute copy of the weights, so the data-parallel reduction GSPMD
     inserts runs on half-precision tensors; the fp32 upcast happens in the
-    optimizer. 'f32' reproduces the fp32-wire baseline."""
+    optimizer. 'f32' reproduces the fp32-wire baseline.
+
+    ``comm`` is either a strategy name ('xla' | 'naive' | any schedule in
+    ``repro.comm.registry``) or a full ``configs.base.CommConfig``, which
+    then also carries the bucket_mb / wire dtype / kernel knobs."""
+    comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
+        strategy=comm, bucket_mb=bucket_mb, wire_dtype=comm_dtype)
+    comm, bucket_mb, comm_dtype = (comm_cfg.strategy, comm_cfg.bucket_mb,
+                                   comm_cfg.wire_dtype)
     loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=mesh)
 
     def sgd_update(state: TrainState, grads, metrics, new_bn):
@@ -120,11 +129,14 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     plan = bucketing.make_plan(jax.tree.map(
         lambda pd: pd, model.param_pd), bucket_mb=bucket_mb)
 
+    wire = jnp.bfloat16 if comm_dtype == "bf16" else jnp.float32
+
     def local_step(state: TrainState, batch):
         (_, (metrics, new_bn)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params, batch, state.bn_state)
         grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
-                                    plan=plan)
+                                    plan=plan, comm_dtype=wire,
+                                    use_kernel=comm_cfg.use_kernel)
         if new_bn is not None:
             # BN batch stats stay local (paper §III-A.2); only the moving-
             # average *buffers* are averaged so the SPMD state is replicated
@@ -137,7 +149,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         batch_specs = {k: P(axes, *([None] * (v.ndim - 1)))
                        for k, v in batch.items()}
         state_spec = jax.tree.map(lambda _: P(), state)
-        return jax.shard_map(
+        return compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(state_spec, batch_specs),
             out_specs=(state_spec,

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.tier1  # fast, in-process
+
 from repro.configs import (ALL_ARCHS, ASSIGNED_ARCHS, active_param_count,
                            get_config, param_count, shapes_for)
 from repro.core import pinit

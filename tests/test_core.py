@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1  # fast, in-process
+
 from repro.core import bucketing, lars, pinit
 from repro.core.label_smoothing import IGNORE, smoothed_xent, top1_accuracy
 from repro.core.precision import cast_to_compute

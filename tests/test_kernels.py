@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.tier1  # fast, in-process
+
 from repro.core import bucketing
 from repro.kernels import ops, ref
 

