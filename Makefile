@@ -1,10 +1,21 @@
 # Convenience wrappers around the repo's canonical commands (ROADMAP.md).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-tier1 bench comm-table dryrun
+.PHONY: test test-tier1 bench comm-table dryrun ci
 
 test:            ## tier-1 verify: the full suite, fail fast
 	$(PY) -m pytest -x -q
+
+ci:              ## reproduce both .github/workflows/ci.yml jobs locally
+	JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -x -q
+	@test -z "$$(git status --porcelain)" || \
+		{ git status --porcelain; \
+		  echo "FAIL: tree dirty after tests (extend .gitignore)"; exit 1; }
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks; \
+	else echo "ruff not installed locally; CI runs it"; fi
+	$(PY) -m benchmarks.run --smoke --json experiments/bench-smoke.json
 
 test-tier1:      ## fast in-process subset (no 8-device subprocesses)
 	$(PY) -m pytest -x -q -m tier1

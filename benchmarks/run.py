@@ -437,24 +437,153 @@ for s in fns:
              f"2x16x16={p2.time_s*1e6:.0f}us")
 
 
+def bench_comm_overlap(quick: bool):
+    """Overlap on/off x schedule sweep (§III-C.2): real train steps on 8
+    host devices, overlap toggled via CommConfig. Variants are interleaved
+    within each timing round and medians reported (wall times drift tens of
+    percent between processes — never compare across runs). Host-CPU
+    collectives are memcpy-bound, so the derived column adds the v5e
+    alpha-beta overlap prediction (repro/comm/autotune.py) where the
+    topology/overlap win actually shows."""
+    import subprocess
+    import sys
+
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    schedules = ["psum"] if quick else ["psum", "ring", "dbtree"]
+    rounds = 5 if quick else 9
+    t0 = time.perf_counter()
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.configs.base import CommConfig
+from repro.configs.shapes import InputShape
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.data.synthetic import make_batch_fn
+from repro.models.registry import build_model
+from repro.train import state as st
+from repro.train.step import make_train_step
+
+SCHEDULES = %r
+ROUNDS = %d
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+cfg = get_config("resnet50").reduced()
+model = build_model(cfg)
+sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
+                                     total_steps=50))
+bf = make_batch_fn(cfg, InputShape("t", "train", 0, 32), mesh=mesh)
+s0 = st.init_state(model, 0)
+batch = bf(s0.step)
+fns = {}
+for sname in SCHEDULES:
+    for ov in (False, True):
+        cc = CommConfig(strategy=sname, bucket_mb=0.25, overlap=ov)
+        fns[(sname, ov)] = jax.jit(make_train_step(
+            model, lars.OptConfig(kind="lars"), sched, mesh=mesh, comm=cc))
+for f in fns.values():
+    jax.block_until_ready(f(s0, batch))     # compile + warm
+times = {k: [] for k in fns}
+for r in range(ROUNDS):                     # interleave within each round
+    for k, f in fns.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(s0, batch))
+        times[k].append(time.perf_counter() - t0)
+for (sname, ov), ts in times.items():
+    print(f"{sname}|{int(ov)},{float(np.median(ts)) * 1e6:.0f}")
+""" % (schedules, rounds)
+    try:
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=900,
+                           env={**os.environ, "PYTHONPATH": "src"})
+    except subprocess.TimeoutExpired:
+        emit("comm.overlap", (time.perf_counter() - t0) * 1e6,
+             "FAILED: 900s subprocess timeout")
+        return
+    res = dict(line.split(",") for line in r.stdout.strip().splitlines()
+               if "," in line)
+    if not res:
+        emit("comm.overlap", (time.perf_counter() - t0) * 1e6,
+             f"FAILED: {r.stderr[-200:]}")
+        return
+    model = build_model(get_config("resnet50"))
+    for s in schedules:
+        if f"{s}|0" not in res or f"{s}|1" not in res:
+            emit(f"comm.overlap_{s}", (time.perf_counter() - t0) * 1e6,
+                 f"MISSING rows: {r.stderr[-120:]}")
+            continue
+        off, on = float(res[f"{s}|0"]), float(res[f"{s}|1"])
+        tuned = autotune(model.param_pd, schedule=s, axes=("data",),
+                         sizes=(16,), family="conv")
+        emit(f"comm.overlap_{s}", on,
+             f"post-backward {off:.0f}us -> overlapped {on:.0f}us "
+             f"({off/on:.2f}x, hostCPU median of {rounds} interleaved "
+             f"rounds); v5e 16x16 predicted overlap eff "
+             f"{tuned.sim.overlap_eff:.2f} @ {tuned.bucket_mb:g}MB buckets")
+
+
+def bench_autotune_plan(quick: bool):
+    """Pure cost-model rows (no training): the autotuner's joint
+    (schedule x bucket size) pick per production mesh — the plan
+    ``CommConfig(bucket_mb='auto')`` resolves to."""
+    from repro.comm.autotune import best_plan
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("resnet50"))
+    for tag, axes, sizes in [("16x16", ("data",), (16,)),
+                             ("2x16x16", ("pod", "data"), (2, 16))]:
+        t0 = time.perf_counter()
+        b = best_plan(model.param_pd, axes=axes, sizes=sizes, family="conv")
+        emit(f"comm.autotune_{tag}", (time.perf_counter() - t0) * 1e6,
+             f"best={b.schedule}@{b.bucket_mb:g}MB n_buckets={b.n_buckets} "
+             f"t_comm={b.sim.t_comm_s*1e6:.0f}us "
+             f"exposed={b.sim.t_exposed_s*1e6:.0f}us "
+             f"overlap_eff={b.sim.overlap_eff:.2f}")
+
+
 ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_lars_ablation, bench_smoothing_ablation,
        bench_bn_momentum_ablation,
        bench_kernel_batched_norm, bench_kernel_smoothed_xent,
        bench_kernel_lars_update, bench_comm_bucketing,
-       bench_comm_schedules]
+       bench_comm_schedules, bench_comm_overlap, bench_autotune_plan]
+
+# --smoke: the CI micro-run — pure-math projections only (no subprocess
+# training, no 8-device compiles), finishes in seconds and emits the JSON
+# artifact that tracks the bench trajectory per-PR
+SMOKE = [bench_table1, bench_fig2, bench_autotune_plan]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI micro-run: projection benches only + --json")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON array")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in (SMOKE if args.smoke else ALL):
         if args.only and args.only not in fn.__name__:
             continue
-        fn(args.quick)
+        fn(args.smoke or args.quick)
+    if args.json:
+        import json
+        payload = [{"name": n, "us_per_call": us, "derived": d}
+                   for n, us, d in ROWS]
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -2,10 +2,17 @@
 
 Decomposes gradient all-reduce into composable schedules over the mesh's
 data-parallel axes — ``psum`` (fused baseline), ``ring``, ``hierarchical``
-(Akiba-style intra/inter), ``2d_torus`` (Sony-style) — each paired with an
-alpha-beta cost model that predicts wall time from mesh shape, payload
-bytes, and the link constants in ``launch/mesh.py``. See docs/comm.md.
+(Akiba-style intra/inter), ``2d_torus`` (Sony-style), ``dbtree`` (double
+binary tree) — each paired with an alpha-beta cost model that predicts
+wall time from mesh shape, payload bytes, and the link constants in
+``launch/mesh.py``. ``autotune`` searches bucket size (and schedule)
+against the cost model plus an overlap timeline. See docs/comm.md.
 """
 from repro.comm.registry import available, get_schedule  # noqa: F401
 from repro.comm.cost import (  # noqa: F401
     CostBreakdown, Link, predict, predict_table)
+# NOTE: ``repro.comm.autotune`` stays a *module* attribute here (the
+# bucket-size search entry point is ``repro.comm.autotune.autotune``);
+# only the result types are lifted to the package root.
+from repro.comm.autotune import (  # noqa: F401
+    CANDIDATES_MB, OverlapSim, TunedPlan, best_plan, simulate)

@@ -1,0 +1,173 @@
+"""Bucket-size autotuning against the alpha-beta cost model (§III-C.1).
+
+The paper hand-tunes its "several megabytes" bucket size: big buckets
+amortize per-message latency (alpha), small buckets finish earlier groups
+sooner and hide more communication behind the backward pass. This module
+makes that trade-off a search:
+
+  1. For each candidate ``bucket_mb``, build the static ``BucketPlan``
+     (``core/bucketing.py`` — group boundaries in backward-completion
+     order).
+  2. Predict each bucket's collective time with ``comm/cost.py`` and each
+     group's backward compute time with a per-group backward-time model
+     (measured total backward time apportioned over groups by parameter
+     volume — conv/matmul grad FLOPs scale with parameter count at fixed
+     batch).
+  3. Simulate the overlapped timeline: bucket *b*'s collective may start
+     once its group's gradients are ready AND the link is free (collectives
+     serialize on the wire), so
+
+        start_b  = max(ready_b, finish_{b-1});  finish_b = start_b + c_b
+        exposed  = max(0, finish_last - t_backward_total)
+
+     and the step pays ``t_backward + exposed`` for communication.
+  4. Pick the candidate minimizing predicted step time (ties: fewer
+     buckets, i.e. fewer messages).
+
+``CommConfig(bucket_mb='auto')`` routes through :func:`autotune` at train-
+step build time; ``launch/report.autotune_section`` prints the chosen plan
+per schedule for the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.comm import cost
+from repro.core import bucketing
+from repro.launch import mesh as mesh_consts
+
+#: candidate bucket sizes, MB — brackets the paper's "several megabytes"
+CANDIDATES_MB: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapSim:
+    """Predicted overlapped-step timeline for one (plan, schedule)."""
+    t_backward_s: float          # total backward compute
+    t_comm_s: float              # serialized collective time, all buckets
+    t_exposed_s: float           # comm left showing after the backward ends
+    t_step_s: float              # backward + exposed comm
+    overlap_eff: float           # fraction of comm hidden: 1 - exposed/comm
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPlan:
+    schedule: str
+    bucket_mb: float
+    plan: bucketing.BucketPlan
+    sim: OverlapSim
+
+    @property
+    def n_buckets(self) -> int:
+        return self.plan.n_buckets
+
+
+def backward_times(plan: bucketing.BucketPlan,
+                   t_backward_s: float) -> Tuple[float, ...]:
+    """Per-group backward time: the measured (or estimated) total backward
+    wall time apportioned by each group's padded parameter volume."""
+    total = float(sum(plan.bucket_sizes)) or 1.0
+    return tuple(t_backward_s * s / total for s in plan.bucket_sizes)
+
+
+def backward_flops_per_param(family: Optional[str] = None) -> float:
+    """Backward FLOPs per parameter per example. Matmul families touch each
+    weight ~once per token: fwd 2 FLOPs/param, bwd ~2x that. Convolutions
+    reuse each weight across spatial positions — ResNet-50 is ~4.1 GFLOP
+    fwd per 224px image over 25.6M params, a ~160x reuse factor."""
+    if family == "conv":
+        return 2 * 4.1e9 / 25.6e6
+    return 4.0
+
+
+def estimate_backward_time(n_params: int, *, per_device_batch: int = 320,
+                           mfu: float = 0.45,
+                           flops_per_param: float = 4.0) -> float:
+    """Order-of-magnitude backward-time model when no measurement is given:
+    backward ~= 2x forward ~= ``flops_per_param`` FLOPs per parameter per
+    example (see :func:`backward_flops_per_param`), at ``mfu`` of v5e peak.
+    320 = the paper's 81,920 global batch on 256 chips. Callers with a
+    profiled step should pass the measured time instead."""
+    flops = flops_per_param * float(n_params) * per_device_batch
+    return flops / (mesh_consts.PEAK_FLOPS_BF16 * mfu)
+
+
+def simulate(plan: bucketing.BucketPlan, schedule: str,
+             axes: Sequence[str], sizes: Sequence[int], *,
+             dtype_bytes: int = 2, t_backward_s: float,
+             links: Optional[Dict[str, cost.Link]] = None) -> OverlapSim:
+    """Walk the §III-C.2 timeline: groups finish their backward in packing
+    order; each bucket's collective starts at max(grads ready, link free)."""
+    bt = backward_times(plan, t_backward_s)
+    ready = np.cumsum(bt)
+    free = 0.0
+    t_comm = 0.0
+    for b, payload in enumerate(plan.bucket_bytes(dtype_bytes)):
+        c = cost.predict(schedule, axes, sizes, payload,
+                         n_buckets=1, links=links).time_s
+        free = max(float(ready[b]), free) + c
+        t_comm += c
+    exposed = max(0.0, free - t_backward_s)
+    eff = min(1.0, max(0.0, 1.0 - exposed / t_comm)) if t_comm > 0 else 1.0
+    return OverlapSim(t_backward_s=t_backward_s, t_comm_s=t_comm,
+                      t_exposed_s=exposed, t_step_s=t_backward_s + exposed,
+                      overlap_eff=eff)
+
+
+def autotune(tree, *, schedule: str, axes: Sequence[str],
+             sizes: Sequence[int], dtype_bytes: int = 2,
+             t_backward_s: Optional[float] = None,
+             family: Optional[str] = None,
+             candidates: Sequence[float] = CANDIDATES_MB,
+             links: Optional[Dict[str, cost.Link]] = None) -> TunedPlan:
+    """Best bucket size for one schedule on one mesh. ``tree`` is the
+    parameter (descriptor) pytree the plans are built from; ``family``
+    (configs ModelConfig.family) refines the backward-time default when no
+    measured ``t_backward_s`` is given."""
+    if t_backward_s is None:
+        n_params = sum(int(np.prod(leaf.shape)) if leaf.shape else 1
+                       for leaf in jax.tree.leaves(tree))
+        t_backward_s = estimate_backward_time(
+            n_params, flops_per_param=backward_flops_per_param(family))
+    best = None
+    for mb in candidates:
+        plan = bucketing.make_plan(tree, bucket_mb=mb,
+                                   dtype_bytes=dtype_bytes)
+        sim = simulate(plan, schedule, axes, sizes, dtype_bytes=dtype_bytes,
+                       t_backward_s=t_backward_s, links=links)
+        key = (sim.t_step_s, plan.n_buckets)
+        if best is None or key < best[0]:
+            best = (key, TunedPlan(schedule=schedule, bucket_mb=mb,
+                                   plan=plan, sim=sim))
+    assert best is not None, "empty candidate list"
+    return best[1]
+
+
+def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
+              schedules: Optional[Sequence[str]] = None,
+              dtype_bytes: int = 2, t_backward_s: Optional[float] = None,
+              family: Optional[str] = None,
+              links: Optional[Dict[str, cost.Link]] = None) -> TunedPlan:
+    """Joint (schedule x bucket size) search over every registered schedule
+    that has a cost model — what the dry-run comm table reports."""
+    if schedules is None:
+        from repro.comm.registry import available
+        schedules = available()
+    best = None
+    for s in schedules:
+        try:
+            t = autotune(tree, schedule=s, axes=axes, sizes=sizes,
+                         dtype_bytes=dtype_bytes, t_backward_s=t_backward_s,
+                         family=family, links=links)
+        except KeyError:          # registered but uncosted schedule
+            continue
+        key = (t.sim.t_step_s, t.n_buckets)
+        if best is None or key < best[0]:
+            best = (key, t)
+    assert best is not None, \
+        f"no costed schedule among {list(schedules)!r}"
+    return best[1]

@@ -83,6 +83,17 @@ def predict(schedule: str, axes: Sequence[str], sizes: Sequence[int],
     elif schedule == "ring":
         for a, n in zip(reversed(axes), reversed(sizes)):
             ring_ar(a, B, n, links[a])
+    elif schedule == "dbtree":
+        # two mirrored binomial trees, each carrying B/2: the critical path
+        # is ceil(log2 n) levels of one B/2 message up (reduce) and the
+        # same back down (broadcast) — alpha scales with log n, not n
+        for a, n in zip(reversed(axes), reversed(sizes)):
+            if n > 1:
+                depth = (n - 1).bit_length()
+                ph.append(Phase(f"tree-reduce[{a}]", depth,
+                                depth * B / 2, links[a]))
+                ph.append(Phase(f"tree-bcast[{a}]", depth,
+                                depth * B / 2, links[a]))
     elif schedule in ("hierarchical", "2d_torus"):
         intra, n = axes[-1], sizes[-1]
         shard = B / max(n, 1)

@@ -85,3 +85,51 @@ def ring_all_reduce(x, axis, *, step_fn=None, pad_to: int = 1):
     """Bandwidth-optimal single-axis ring all-reduce (sum)."""
     shard, L = ring_reduce_scatter(x, axis, step_fn=step_fn, pad_to=pad_to)
     return ring_all_gather(shard, axis, L)
+
+
+# --------------------------------------------------------------------------
+# binomial trees (the dbtree schedule's building block)
+
+def tree_edges(n: int):
+    """Binomial-tree edges rooted at rank 0, as per-level (child, parent)
+    pair lists, leaves-first. Level ``l`` pairs every rank whose lowest set
+    bit is ``l`` with that bit cleared, so every rank sends exactly once and
+    rank 0 ends holding the full reduction after ``ceil(log2 n)`` levels.
+    Works for any ``n`` (non-powers-of-two simply have sparser levels)."""
+    levels, step = [], 1
+    while step < n:
+        levels.append([(s, s - step) for s in range(step, n, 2 * step)])
+        step *= 2
+    return levels
+
+
+def tree_all_reduce(x, axis):
+    """Double-binary-tree all-reduce (sum) over one mesh axis.
+
+    NCCL-lineage latency optimum: two complementary binomial trees — one
+    rooted at rank 0, its rank-mirrored twin rooted at ``n-1`` — each
+    reduce-then-broadcast one half of the buffer, so the critical path is
+    ``2*ceil(log2 n)`` messages of B/2 instead of the ring's ``2(n-1)``
+    messages. Non-participants of a level receive ppermute's zero fill,
+    which is absorbed by the sum (reduce) or masked out (broadcast)."""
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    r = jax.lax.axis_index(axis)
+    levels = tree_edges(n)
+    h = -(-x.shape[0] // 2)
+    a, b = x[:h], x[h:]                  # tree A: ranks as-is; B: mirrored
+    for pairs in levels:                 # reduce toward the roots
+        a = a + jax.lax.ppermute(a, axis, pairs)
+        b = b + jax.lax.ppermute(
+            b, axis, [(n - 1 - c, n - 1 - p) for c, p in pairs])
+    for lvl in reversed(range(len(levels))):   # broadcast back down
+        pairs = levels[lvl]
+        is_child = (r % (2 << lvl)) == (1 << lvl)
+        recv = jax.lax.ppermute(a, axis, [(p, c) for c, p in pairs])
+        a = jnp.where(is_child, recv, a)
+        is_child_m = ((n - 1 - r) % (2 << lvl)) == (1 << lvl)
+        recv = jax.lax.ppermute(
+            b, axis, [(n - 1 - p, n - 1 - c) for c, p in pairs])
+        b = jnp.where(is_child_m, recv, b)
+    return jnp.concatenate([a, b])

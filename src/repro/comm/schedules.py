@@ -22,6 +22,10 @@ Registered schedules:
                  ``axes[-1]``, ring all-reduce of the shard along each
                  orthogonal axis, ring all-gather back. Same wire bytes as
                  hierarchical but every phase is explicit ppermute rings.
+  dbtree       — double binary tree (NCCL lineage): two mirrored binomial
+                 trees each reduce+broadcast half the buffer, per axis.
+                 Logarithmic latency — wins for small (latency-bound)
+                 buckets, which is where the autotuner selects it.
 
 ``use_kernel=True`` swaps the reduce-scatter inner fold for the Pallas
 ring-step kernel (``repro.comm.ring_kernel``), which requires CHUNK-aligned
@@ -66,6 +70,18 @@ def hierarchical_schedule(buf, axes, *, use_kernel: bool = False,
     if inter:
         shard = jax.lax.psum(shard, inter)
     return prim.ring_all_gather(shard, intra, n)
+
+
+@register("dbtree")
+def dbtree_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
+    """Double-binary-tree all-reduce per axis, innermost first (NCCL
+    lineage): ``2*ceil(log2 n)`` critical-path messages instead of the
+    ring's ``2(n-1)`` — the latency-optimal point the bucket autotuner
+    picks for small buckets. The tree fold is a plain add (no ring-step
+    kernel variant), so ``use_kernel`` is accepted but inert."""
+    for axis in reversed(axes):
+        buf = prim.tree_all_reduce(buf, axis)
+    return buf
 
 
 @register("2d_torus")

@@ -18,15 +18,30 @@ class CommConfig:
 
     ``strategy``: 'xla' (GSPMD inserts collectives) | 'naive' (per-tensor
     psum) | any schedule in ``repro.comm.registry`` — 'bucketed'/'psum',
-    'ring', 'hierarchical', '2d_torus' — applied per static bucket group.
+    'ring', 'hierarchical', '2d_torus', 'dbtree' — applied per static
+    bucket group.
+
+    ``bucket_mb`` may be the string ``'auto'``: the bucket size is then
+    chosen by ``repro.comm.autotune`` against the alpha-beta cost model
+    plus the per-group backward-time model (docs/comm.md §Autotuning).
+
+    ``overlap=True`` (default) issues each bucket's collective from inside
+    the backward pass, as soon as its layer group's gradients are complete
+    (§III-C.2); ``False`` reproduces the post-backward PR-2 path. Ignored
+    by 'xla' and 'naive'.
     """
     strategy: str = "xla"
-    bucket_mb: float = 4.0       # the paper's "several megabytes"
+    bucket_mb: float = 4.0       # the paper's "several megabytes", | 'auto'
     wire_dtype: str = "bf16"     # bf16 | f32 on the wire (paper §IV)
     use_kernel: bool = False     # Pallas ring-step fold (comm/ring_kernel)
+    overlap: bool = True         # issue bucket collectives inside backward
 
     def __post_init__(self):
         assert self.wire_dtype in ("bf16", "f32"), self.wire_dtype
+        if isinstance(self.bucket_mb, str):
+            assert self.bucket_mb == "auto", self.bucket_mb
+        else:
+            assert self.bucket_mb > 0, self.bucket_mb
 
 
 @dataclass(frozen=True)

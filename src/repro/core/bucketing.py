@@ -51,6 +51,21 @@ class BucketPlan:
     def n_tensors(self) -> int:
         return len(self.slots)
 
+    @property
+    def groups(self) -> Tuple[Tuple[TensorSlot, ...], ...]:
+        """Slots grouped per bucket, in packing (= backward-completion)
+        order — the static layer-group boundaries of §III-C.2. The overlap
+        scheduler issues one collective per group from inside the backward
+        pass, and the autotuner costs each group's payload separately."""
+        out: List[List[TensorSlot]] = [[] for _ in self.bucket_sizes]
+        for slot in self.slots:
+            out[slot.bucket].append(slot)
+        return tuple(tuple(g) for g in out)
+
+    def bucket_bytes(self, dtype_bytes: int = 2) -> Tuple[int, ...]:
+        """Wire payload per bucket (padded elements x wire dtype width)."""
+        return tuple(s * dtype_bytes for s in self.bucket_sizes)
+
 
 def _path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -81,23 +96,15 @@ def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2
 
 
 def pack(tree, plan: BucketPlan, dtype=jnp.bfloat16) -> List[jax.Array]:
-    """Pytree -> list of flat per-bucket buffers (paper's allreduce payloads).
-
-    Staged in f32: XLA's CPU backend lowers bf16 concatenate /
-    dynamic-update-slice to scalar loops (~15x slower than f32), so the
-    buffer is assembled in f32 and cast to the wire dtype once per bucket —
-    the payload that crosses the links is still ``dtype``."""
-    stage = jnp.float32 if dtype == jnp.bfloat16 else dtype
+    """Pytree -> list of flat per-bucket buffers (paper's allreduce
+    payloads): one ``pack_group`` per static bucket group."""
     leaves = list(reversed(jax.tree_util.tree_leaves(tree)))
     assert len(leaves) == plan.n_tensors
-    bufs = [[] for _ in plan.bucket_sizes]
-    for slot, leaf in zip(plan.slots, leaves):
-        flat = leaf.reshape(-1).astype(stage)
-        if slot.padded != slot.size:
-            flat = jnp.concatenate(
-                [flat, jnp.zeros(slot.padded - slot.size, stage)])
-        bufs[slot.bucket].append(flat)
-    return [jnp.concatenate(b).astype(dtype) for b in bufs]
+    bufs, i = [], 0
+    for group in plan.groups:
+        bufs.append(pack_group(leaves[i:i + len(group)], group, dtype=dtype))
+        i += len(group)
+    return bufs
 
 
 def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):
@@ -108,6 +115,31 @@ def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):
                                             slot.padded)
         leaves.append(flat[:slot.size].reshape(slot.shape).astype(dtype))
     return jax.tree_util.tree_unflatten(plan.treedef, list(reversed(leaves)))
+
+
+def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
+    """One bucket group's leaves -> its flat wire buffer (``leaves``
+    ordered like ``slots``, i.e. by slot offset).
+
+    Staged in f32: XLA's CPU backend lowers bf16 concatenate /
+    dynamic-update-slice to scalar loops (~15x slower than f32), so the
+    buffer is assembled in f32 and cast to the wire dtype once per bucket —
+    the payload that crosses the links is still ``dtype``."""
+    stage = jnp.float32 if dtype == jnp.bfloat16 else dtype
+    parts = []
+    for slot, leaf in zip(slots, leaves):
+        flat = leaf.reshape(-1).astype(stage)
+        if slot.padded != slot.size:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros(slot.padded - slot.size, stage)])
+        parts.append(flat)
+    return jnp.concatenate(parts).astype(dtype)
+
+
+def unpack_group(buf: jax.Array, slots, dtype=jnp.float32):
+    """Inverse of ``pack_group``: flat buffer -> list of leaves."""
+    return [buf[s.offset:s.offset + s.padded][:s.size]
+            .reshape(s.shape).astype(dtype) for s in slots]
 
 
 def segment_ids(plan: BucketPlan) -> np.ndarray:

@@ -11,9 +11,15 @@ collective pattern is explicit and controllable:
                  (static layer groups, §III-C.2) and one collective is
                  issued per bucket as soon as its group's backward is done.
 * any name in ``repro.comm.registry`` (``psum``, ``ring``, ``hierarchical``,
-  ``2d_torus``) — same bucket plan, but the per-bucket collective is the
-  named composable schedule instead of a fused psum (``bucketed`` is an
-  alias for ``psum``). See docs/comm.md.
+  ``2d_torus``, ``dbtree``) — same bucket plan, but the per-bucket
+  collective is the named composable schedule instead of a fused psum
+  (``bucketed`` is an alias for ``psum``). See docs/comm.md.
+
+Two issue points for the bucket collectives: ``allreduce_grads`` runs them
+after the full backward pass (PR-2 behaviour, ``CommConfig.overlap=False``),
+while ``wrap_params_for_overlap`` plants them *inside* the backward via a
+per-bucket ``custom_vjp`` so each group's all-reduce overlaps the rest of
+the backward (paper §III-C.2, the default).
 * ``xla``      — handled in train/step.py: no explicit collectives; GSPMD
                  inserts them (the tensor-parallel configs).
 """
@@ -56,3 +62,64 @@ def allreduce_grads(grads, *, strategy: str, axes: Sequence[str],
                      interpret=interpret) for b in bufs]
     red = bucketing.unpack(bufs, plan, dtype=jnp.float32)
     return jax.tree.map(lambda g: g / n, red)
+
+
+def _overlap_bucket_fn(slots, schedule, axes, comm_dtype, use_kernel,
+                       interpret):
+    """custom_vjp identity over one bucket group's param leaves whose
+    backward rule packs the group's cotangents, runs the collective, and
+    returns the reduced-mean fp32 gradients — so the collective sits inside
+    the backward graph, data-dependent only on this group's grads."""
+    @jax.custom_vjp
+    def bucket_identity(leaves):
+        return leaves
+
+    def fwd(leaves):
+        return leaves, None
+
+    def bwd(_, gs):
+        buf = bucketing.pack_group(gs, slots, dtype=comm_dtype)
+        buf = schedule(buf, axes, use_kernel=use_kernel, interpret=interpret)
+        n = axes_size(axes)
+        outs = bucketing.unpack_group(buf, slots, dtype=jnp.float32)
+        return (tuple(o / n for o in outs),)
+
+    bucket_identity.defvjp(fwd, bwd)
+    return bucket_identity
+
+
+def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
+                            strategy: str, axes: Sequence[str],
+                            comm_dtype=jnp.bfloat16, use_kernel: bool = False,
+                            interpret: bool = None):
+    """Overlap-aware bucket scheduling (paper §III-C.2).
+
+    Rebuilds ``params`` with each bucket group's leaves routed through an
+    identity whose VJP performs that bucket's all-reduce. Differentiating a
+    loss of the wrapped params then yields *already reduced-mean* fp32
+    gradients, and — unlike ``allreduce_grads``, which runs after the full
+    backward pass — each bucket's collective is issued the moment its
+    group's cotangents are produced, interleaved with the backward work of
+    the earlier (in forward order) layers still to be differentiated. XLA's
+    latency-hiding scheduler is then free to overlap collective and compute;
+    on CPU the graphs are equivalent, on TPU the comm hides.
+
+    Must be called on the primal params *inside* the differentiated
+    function, itself inside ``shard_map`` over ``axes``."""
+    from repro.comm import get_schedule
+    schedule = get_schedule(strategy)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n_leaves = len(leaves)
+    assert n_leaves == plan.n_tensors
+    new_leaves = list(leaves)
+    # slot i describes leaf n-1-i (the plan walks reverse flatten order)
+    leaf_idx = {id(slot): n_leaves - 1 - i
+                for i, slot in enumerate(plan.slots)}
+    for group in plan.groups:
+        idxs = [leaf_idx[id(s)] for s in group]
+        fn = _overlap_bucket_fn(group, schedule, tuple(axes), comm_dtype,
+                                use_kernel, interpret)
+        outs = fn(tuple(leaves[j] for j in idxs))
+        for j, o in zip(idxs, outs):
+            new_leaves[j] = o
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -113,12 +113,15 @@ def main():
                     help="experiment tag (baseline / perf-iteration name)")
     ap.add_argument("--comm-table", action="store_true",
                     help="print the per-schedule predicted comm-time table "
-                         "for the production meshes and exit (no compiles)")
+                         "plus the autotuned bucket plan for the production "
+                         "meshes and exit (no compiles)")
     args = ap.parse_args()
 
     if args.comm_table:
-        from repro.launch.report import comm_section
+        from repro.launch.report import autotune_section, comm_section
         print(comm_section())
+        print()
+        print(autotune_section())
         return
 
     archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")

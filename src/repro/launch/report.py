@@ -148,16 +148,51 @@ def comm_section(payload_bytes: float = None, bucket_mb: float = 4.0) -> str:
     return "\n".join(rows)
 
 
+def autotune_section(arch: str = "resnet50") -> str:
+    """Per-schedule autotuned bucket plan + predicted overlap efficiency
+    for the production meshes (repro/comm/autotune.py). Backward time comes
+    from the family-aware FLOPs model at the paper's 320 images/device."""
+    from repro.comm import available
+    from repro.comm.autotune import CANDIDATES_MB, autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    rows = [f"### Autotuned bucket plan ({arch} gradients, bf16 wire; "
+            f"candidates {', '.join(f'{c:g}' for c in CANDIDATES_MB)} MB)\n",
+            "| mesh | schedule | bucket MB | buckets | t_comm | exposed "
+            "| overlap eff | t_step |",
+            "|---|---|---|---|---|---|---|---|"]
+    for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
+        tuned = [autotune(model.param_pd, schedule=s, axes=axes, sizes=sizes,
+                          family=cfg.family)
+                 for s in available()]
+        best = min(tuned, key=lambda t: (t.sim.t_step_s, t.n_buckets))
+        for t in sorted(tuned, key=lambda t: t.sim.t_step_s):
+            star = " **<-**" if (t.schedule == best.schedule
+                                 and t.bucket_mb == best.bucket_mb) else ""
+            rows.append(
+                f"| {tag} | {t.schedule} | {t.bucket_mb:g} "
+                f"| {t.n_buckets} | {fmt_t(t.sim.t_comm_s)} "
+                f"| {fmt_t(t.sim.t_exposed_s)} | {t.sim.overlap_eff:.2f} "
+                f"| {fmt_t(t.sim.t_step_s)}{star} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun/baseline")
     ap.add_argument("--compare", default=None,
                     help="second records dir: emit baseline-vs-optimized")
     ap.add_argument("--section", default="roofline",
-                    choices=["roofline", "dryrun", "comm"])
+                    choices=["roofline", "dryrun", "comm", "autotune"])
     args = ap.parse_args()
     if args.section == "comm":
         print(comm_section())
+        return
+    if args.section == "autotune":
+        print(autotune_section())
         return
     recs = load(args.dir)
     if args.compare:

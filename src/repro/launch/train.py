@@ -42,7 +42,13 @@ def main(argv=None):
     ap.add_argument("--comm", default="xla",
                     choices=["xla", "naive"] + sorted(
                         set(available()) | set(ALIASES)))
-    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--bucket-mb", default=4.0, metavar="MB|auto",
+                    type=lambda s: s if s == "auto" else float(s),
+                    help="bucket size in MB, or 'auto' to autotune against "
+                         "the comm cost model (repro/comm/autotune.py)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="post-backward collectives instead of issuing "
+                         "each bucket's all-reduce inside the backward")
     ap.add_argument("--lr", type=float, default=None,
                     help="default: linear-scaling rule from batch size")
     ap.add_argument("--warmup", type=int, default=None)
@@ -76,10 +82,17 @@ def main(argv=None):
     shape = InputShape("cli", "train", args.seq, args.batch)
     batch_fn = make_batch_fn(cfg, shape, seed=args.seed, kind=args.data,
                              mesh=mesh)
+    from repro.configs.base import CommConfig
+    comm_cfg = CommConfig(strategy=args.comm, bucket_mb=args.bucket_mb,
+                          overlap=not args.no_overlap)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
-                                 mesh=mesh, comm=args.comm,
-                                 bucket_mb=args.bucket_mb,
+                                 mesh=mesh, comm=comm_cfg,
                                  grad_accum=args.grad_accum)
+    if getattr(train_step, "tuned", None) is not None:
+        t = train_step.tuned
+        print(f"autotuned bucket plan: {t.bucket_mb:g}MB x "
+              f"{t.n_buckets} buckets, predicted overlap eff "
+              f"{t.sim.overlap_eff:.2f}", flush=True)
     eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
 
     state = init_state(model, args.seed, mesh,

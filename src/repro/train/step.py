@@ -13,6 +13,12 @@ Two distribution paths (DESIGN.md §2.2):
   order and one ``psum`` is issued per bucket ('bucketed'), or one per
   tensor ('naive' — the baseline the paper measures against). Restricted to
   replicated-parameter models (the paper's ResNet-50 and the small LMs).
+  With ``CommConfig.overlap`` (the default) each bucket's collective is
+  issued from *inside* the backward pass via a per-group custom-vjp
+  (``core/ddp.wrap_params_for_overlap``) the moment its layer group's
+  gradients are complete — §III-C.2's overlap — and
+  ``CommConfig.bucket_mb='auto'`` sizes the buckets with
+  ``repro.comm.autotune`` against the alpha-beta cost model.
 
 The loss is label-smoothed cross entropy (paper §III-A.2) + MoE aux; the
 optimizer is LARS or momentum-SGD (paper §III-A.1) on fp32 masters with
@@ -77,7 +83,8 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
 
     ``comm`` is either a strategy name ('xla' | 'naive' | any schedule in
     ``repro.comm.registry``) or a full ``configs.base.CommConfig``, which
-    then also carries the bucket_mb / wire dtype / kernel knobs."""
+    then also carries the bucket_mb ('auto' = autotuned) / wire dtype /
+    kernel / overlap knobs."""
     comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
         strategy=comm, bucket_mb=bucket_mb, wire_dtype=comm_dtype)
     comm, bucket_mb, comm_dtype = (comm_cfg.strategy, comm_cfg.bucket_mb,
@@ -126,17 +133,45 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     # ------ explicit-DDP path (paper §III-C), pure data parallelism ------
     assert mesh is not None
     axes = tuple(mesh.axis_names)          # every axis is data-parallel
-    plan = bucketing.make_plan(jax.tree.map(
-        lambda pd: pd, model.param_pd), bucket_mb=bucket_mb)
-
     wire = jnp.bfloat16 if comm_dtype == "bf16" else jnp.float32
+    wire_bytes = 2 if comm_dtype == "bf16" else 4
+
+    tuned = None
+    if bucket_mb == "auto":
+        if comm == "naive":
+            bucket_mb = 4.0            # per-tensor psums: plan is unused
+        else:
+            from repro.comm.autotune import autotune
+            tuned = autotune(
+                model.param_pd, schedule=comm, axes=axes,
+                sizes=tuple(mesh.shape[a] for a in axes),
+                dtype_bytes=wire_bytes, family=model.cfg.family)
+            bucket_mb = tuned.bucket_mb
+    plan = bucketing.make_plan(jax.tree.map(
+        lambda pd: pd, model.param_pd), bucket_mb=bucket_mb,
+        dtype_bytes=wire_bytes)
+
+    # overlap-aware scheduling (§III-C.2): wrap each bucket group's params
+    # in a custom-vjp identity so its collective fires inside the backward
+    # pass, as soon as the group's grads exist. 'naive' has no buckets.
+    overlap = comm_cfg.overlap and comm != "naive"
 
     def local_step(state: TrainState, batch):
-        (_, (metrics, new_bn)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params, batch, state.bn_state)
-        grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
-                                    plan=plan, comm_dtype=wire,
-                                    use_kernel=comm_cfg.use_kernel)
+        if overlap:
+            def wrapped_loss(params, b, bn):
+                p = ddp.wrap_params_for_overlap(
+                    params, plan, strategy=comm, axes=axes, comm_dtype=wire,
+                    use_kernel=comm_cfg.use_kernel)
+                return loss_fn(p, b, bn)
+            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+                wrapped_loss, has_aux=True)(state.params, batch,
+                                            state.bn_state)
+        else:
+            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch, state.bn_state)
+            grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
+                                        plan=plan, comm_dtype=wire,
+                                        use_kernel=comm_cfg.use_kernel)
         if new_bn is not None:
             # BN batch stats stay local (paper §III-A.2); only the moving-
             # average *buffers* are averaged so the SPMD state is replicated
@@ -156,6 +191,11 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                        {"loss": P(), "aux": P(), "acc": P(), "lr": P()}),
         )(state, batch)
 
+    # introspection for launch/dryrun/report: the resolved comm plan
+    train_step.bucket_plan = plan
+    train_step.bucket_mb = bucket_mb
+    train_step.tuned = tuned
+    train_step.overlap = overlap
     return train_step
 
 

@@ -28,7 +28,7 @@ pytestmark = pytest.mark.tier1
 
 def test_registry_lists_all_schedules():
     assert set(comm.available()) == {"psum", "ring", "hierarchical",
-                                     "2d_torus"}
+                                     "2d_torus", "dbtree"}
 
 
 def test_registry_alias_and_unknown():
@@ -75,8 +75,24 @@ def test_cost_bucketing_scales_alpha_not_bytes():
 
 
 def test_cost_degenerate_axes_are_free():
-    r = cost.predict("2d_torus", ("pod", "data"), (1, 1), 50 * MB)
-    assert r.time_s == 0 and r.n_messages == 0
+    for s in ("2d_torus", "dbtree"):
+        r = cost.predict(s, ("pod", "data"), (1, 1), 50 * MB)
+        assert r.time_s == 0 and r.n_messages == 0
+
+
+def test_cost_dbtree_latency_vs_bandwidth_regimes():
+    """The double binary tree is the logarithmic-latency point: it beats
+    the ring for small (alpha-bound) payloads — 2*ceil(log2 n) messages vs
+    2(n-1) — and loses for large (bandwidth-bound) ones."""
+    small = 64 * 1024
+    tree_s = cost.predict("dbtree", ("data",), (16,), small)
+    ring_s = cost.predict("ring", ("data",), (16,), small)
+    assert tree_s.n_messages == 2 * 4      # ceil(log2 16) up + down
+    assert ring_s.n_messages == 2 * 15
+    assert tree_s.time_s < ring_s.time_s
+    big = 64 * MB
+    assert cost.predict("dbtree", ("data",), (16,), big).time_s > \
+        cost.predict("ring", ("data",), (16,), big).time_s
 
 
 def test_cost_table_sorted():
@@ -103,9 +119,32 @@ def _roundtrip_1dev(strategy):
 
 
 @pytest.mark.parametrize("strategy", ["naive", "bucketed", "psum", "ring",
-                                      "hierarchical", "2d_torus"])
+                                      "hierarchical", "2d_torus", "dbtree"])
 def test_schedules_identity_on_1_device(strategy):
     _roundtrip_1dev(strategy)
+
+
+@pytest.mark.parametrize("strategy", ["bucketed", "ring", "dbtree"])
+def test_overlap_identity_on_1_device(strategy):
+    """The custom-vjp overlap wrap is grad-transparent on a trivial mesh."""
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(5000, dtype=jnp.float32),
+            "b": jnp.ones((3,), jnp.float32)}
+    plan = bucketing.make_plan(tree, bucket_mb=0.01)
+
+    def fn(t):
+        def loss(p):
+            p = ddp.wrap_params_for_overlap(p, plan, strategy=strategy,
+                                            axes=("data",),
+                                            comm_dtype=jnp.float32)
+            return sum(jnp.sum(x * x) for x in jax.tree.leaves(p)) / 2
+        return jax.grad(loss)(t)
+
+    spec = jax.tree.map(lambda _: P(), tree)
+    out = jax.jit(shard_map(fn, mesh=mesh, in_specs=(spec,),
+                            out_specs=spec))(tree)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=1e-6),
+                 tree, out)      # d/dx (x^2/2) = x
 
 
 # ------------------------------------------------------ ring-step kernel
@@ -214,6 +253,60 @@ ko = krun("ring", use_kernel=True, interpret=True)
 np.testing.assert_allclose(np.asarray(ko["w"]), np.asarray(kb["w"]),
                            atol=1e-6)
 print("OK kernel-ring")
+
+# Overlap-aware scheduling (SIII-C.2): differentiating a loss of the
+# wrapped params must reproduce naive psum grads exactly, with the bucket
+# plan coming from the autotuner ('auto' acceptance path). Every schedule,
+# both meshes.
+from repro.comm.autotune import autotune
+
+for shape, axes in [((8,), ("data",)), ((2, 4), ("pod", "data"))]:
+    mesh = jax.make_mesh(shape, axes)
+    tuned = autotune(tree, schedule="psum", axes=axes,
+                     sizes=shape, dtype_bytes=4,
+                     candidates=(0.02, 0.05, 0.1))
+    oplan = tuned.plan
+    assert oplan.n_buckets >= 2, (tuned.bucket_mb, oplan.bucket_sizes)
+
+    def rank(axes):
+        r = jnp.float32(0)
+        for a in axes:
+            r = r * axis_size(a) + jax.lax.axis_index(a)
+        return r
+
+    def local_loss(p, r):
+        s = jnp.float32(0)
+        for leaf in jax.tree.leaves(p):
+            x = leaf * (1.0 + 0.1 * r)
+            s = s + jnp.sum(jnp.sin(x) * x)
+        return s
+
+    def overlap_run(strategy):
+        def fn(t):
+            r = rank(axes)
+            def loss(p):
+                p = ddp.wrap_params_for_overlap(
+                    p, oplan, strategy=strategy, axes=axes,
+                    comm_dtype=jnp.float32)
+                return local_loss(p, r)
+            return jax.grad(loss)(t)
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec))(tree)
+
+    def naive_run(t):
+        r = rank(axes)
+        g = jax.grad(lambda p: local_loss(p, r))(t)
+        return ddp.allreduce_grads(g, strategy="naive", axes=axes,
+                                   comm_dtype=jnp.float32)
+
+    obase = jax.jit(shard_map(naive_run, mesh=mesh, in_specs=(spec,),
+                              out_specs=spec))(tree)
+    for s in comm.available() + ["bucketed"]:
+        out = overlap_run(s)
+        md = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()), obase, out)))
+        assert md <= 1e-6, (shape, s, md)
+        print(f"OK overlap {shape} {s} maxdiff={md:.1e}")
 print("COMM-OK")
 """
 
@@ -221,8 +314,115 @@ print("COMM-OK")
 def test_all_schedules_match_naive_8dev():
     """Acceptance: every registered schedule (+ the bucketed alias and the
     Pallas ring-step path) reproduces the naive psum gradients to <=1e-6
-    fp32 on 8 host devices, on both a flat and a (pod, data) mesh."""
+    fp32 on 8 host devices, on both a flat and a (pod, data) mesh — both
+    post-backward (allreduce_grads) and overlap-aware (collectives issued
+    inside the backward via wrap_params_for_overlap, bucket plan resolved
+    by the autotuner)."""
     r = subprocess.run([sys.executable, "-c", EQUIV_SCRIPT],
                        capture_output=True, text=True, timeout=600,
                        env={**os.environ, "PYTHONPATH": "src"})
     assert "COMM-OK" in r.stdout, (r.stdout[-1000:], r.stderr[-3000:])
+
+
+# ------------------------------------------------------------- autotuner
+
+def test_autotune_serialized_comm_monotone_in_bucket_count():
+    """More buckets = more messages on the same bytes: with overlap
+    disabled (t_backward=0) predicted comm time never improves as the
+    bucket count grows."""
+    from repro.comm import autotune as at
+    tree = {f"t{i}": jnp.zeros((256, 256)) for i in range(24)}
+    prev_nb, prev_t = None, None
+    for mb in (8.0, 4.0, 2.0, 1.0, 0.5, 0.25):
+        plan = bucketing.make_plan(tree, bucket_mb=mb, dtype_bytes=2)
+        sim = at.simulate(plan, "ring", ("data",), (16,), t_backward_s=0.0)
+        if prev_nb is not None and plan.n_buckets > prev_nb:
+            assert sim.t_comm_s >= prev_t, (mb, sim.t_comm_s, prev_t)
+        prev_nb, prev_t = plan.n_buckets, sim.t_comm_s
+
+
+def test_autotune_overlap_only_helps():
+    """Overlap can only hide comm: exposed <= serialized comm, eff in
+    [0, 1], and a longer backward window never increases the exposure."""
+    from repro.comm import autotune as at
+    tree = {f"t{i}": jnp.zeros((512, 512)) for i in range(16)}
+    plan = bucketing.make_plan(tree, bucket_mb=1.0)
+    prev = None
+    for tb in (0.0, 1e-4, 1e-3, 1e-2):
+        sim = at.simulate(plan, "ring", ("data",), (16,), t_backward_s=tb)
+        assert 0.0 <= sim.t_exposed_s <= sim.t_comm_s + 1e-12
+        assert 0.0 <= sim.overlap_eff <= 1.0
+        if prev is not None:
+            assert sim.t_exposed_s <= prev + 1e-12
+        prev = sim.t_exposed_s
+
+
+def test_autotune_resolves_for_every_registered_config():
+    """'auto' must produce a valid plan for every config in the pool, on
+    both production meshes."""
+    from repro.comm import autotune as at
+    from repro.configs import ALL_ARCHS, get_config
+    from repro.models.registry import build_model
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch).reduced()
+        pd = build_model(cfg).param_pd
+        for axes, sizes in [(("data",), (16,)),
+                            (("pod", "data"), (2, 16))]:
+            t = at.best_plan(pd, axes=axes, sizes=sizes, family=cfg.family)
+            assert t.bucket_mb in at.CANDIDATES_MB, (arch, t.bucket_mb)
+            assert t.plan.n_tensors == len(jax.tree.leaves(pd))
+            assert t.plan.n_buckets >= 1
+            assert 0.0 <= t.sim.overlap_eff <= 1.0
+            assert t.schedule in comm.available()
+
+
+def test_train_step_resolves_auto_bucket_mb():
+    """CommConfig(bucket_mb='auto') builds and runs a real train step."""
+    from repro.configs import get_config
+    from repro.configs.base import CommConfig
+    from repro.core import lars
+    from repro.core.schedule import ScheduleConfig, make_schedule
+    from repro.data.synthetic import make_batch_fn
+    from repro.configs.shapes import InputShape
+    from repro.models.registry import build_model
+    from repro.train import state as st
+    from repro.train.step import make_train_step
+
+    cfg = get_config("resnet50").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
+                                         total_steps=4))
+    step = make_train_step(model, lars.OptConfig(kind="lars"), sched,
+                           mesh=mesh,
+                           comm=CommConfig(strategy="bucketed",
+                                           bucket_mb="auto"))
+    assert isinstance(step.bucket_mb, float) and step.overlap
+    assert step.tuned is not None and step.tuned.bucket_mb == step.bucket_mb
+    bf = make_batch_fn(cfg, InputShape("t", "train", 0, 8), mesh=mesh)
+    s = st.init_state(model, 0)
+    s, m = jax.jit(step)(s, bf(s.step))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_comm_config_validates_bucket_mb():
+    from repro.configs.base import CommConfig
+    CommConfig(bucket_mb="auto")
+    with pytest.raises(AssertionError):
+        CommConfig(bucket_mb="foo")
+    with pytest.raises(AssertionError):
+        CommConfig(bucket_mb=-1.0)
+
+
+def test_bucket_plan_groups_metadata():
+    """Group boundaries cover every slot once, in packing order."""
+    tree = {f"t{i}": jnp.zeros((300 + i, 17)) for i in range(9)}
+    plan = bucketing.make_plan(tree, bucket_mb=0.05)
+    groups = plan.groups
+    assert len(groups) == plan.n_buckets
+    flat = [s for g in groups for s in g]
+    assert flat == list(plan.slots)
+    for b, g in enumerate(groups):
+        assert all(s.bucket == b for s in g)
+        assert sum(s.padded for s in g) == plan.bucket_sizes[b]
+    assert plan.bucket_bytes(2) == tuple(2 * s for s in plan.bucket_sizes)
