@@ -16,6 +16,9 @@ ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 		ruff check src tests benchmarks; \
 	else echo "ruff not installed locally; CI runs it"; fi
 	$(PY) -m benchmarks.run --smoke --json experiments/bench-smoke.json
+	@$(PY) -c "import json; rows = json.load(open('experiments/bench-smoke.json')); \
+		assert any('shard_update_plan' in r['name'] for r in rows), \
+		'sharded smoke row missing from bench artifact'"
 
 test-tier1:      ## fast in-process subset (no 8-device subprocesses)
 	$(PY) -m pytest -x -q -m tier1

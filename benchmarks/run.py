@@ -120,7 +120,7 @@ def _train_resnet(batch: int, steps: int, *, lr=None, smoothing=0.1,
                        mesh=mesh)
     s = st.init_state(model, seed)
     hist = []
-    for i in range(steps):
+    for _ in range(steps):
         s, m = step(s, bf(s.step))
         hist.append(float(m["acc"]))
     ev = jax.jit(make_eval_step(model, mesh=mesh))
@@ -208,7 +208,7 @@ def _train_resnet_cfg(cfg, batch, steps, *, lr=None, smoothing=0.1,
     bf = make_batch_fn(cfg, InputShape("t", "train", 0, batch), seed=seed,
                        mesh=mesh)
     s = st.init_state(model, seed)
-    for i in range(steps):
+    for _ in range(steps):
         s, m = step(s, bf(s.step))
     ev = jax.jit(make_eval_step(model, mesh=mesh))
     accs = [float(ev(s.params, prototype_imagenet(
@@ -527,6 +527,131 @@ for (sname, ov), ts in times.items():
              f"{tuned.sim.overlap_eff:.2f} @ {tuned.bucket_mb:g}MB buckets")
 
 
+def bench_comm_shard_update(quick: bool):
+    """ZeRO-1 sharded update on/off x schedule sweep (docs/comm.md): real
+    train steps on 8 host devices, variants interleaved per round, medians
+    reported. Host-CPU collectives are memcpy-bound and the interpret-mode
+    update runs via the packed-jnp oracle, so the wall columns mostly show
+    parity; the derived column carries the v5e alpha-beta + update-time
+    accounting (AR(g)+update vs RS(g)+update/n+AG(bf16 p)) where the win
+    is."""
+    import subprocess
+    import sys
+
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    schedules = ["ring"] if quick else ["ring", "2d_torus", "hierarchical"]
+    rounds = 5 if quick else 9
+    t0 = time.perf_counter()
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, numpy as np
+from repro.configs import get_config
+from repro.configs.base import CommConfig
+from repro.configs.shapes import InputShape
+from repro.core import lars
+from repro.core.schedule import ScheduleConfig, make_schedule
+from repro.data.synthetic import make_batch_fn
+from repro.models.registry import build_model
+from repro.train import state as st
+from repro.train.step import make_train_step
+
+SCHEDULES = %r
+ROUNDS = %d
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+cfg = get_config("resnet50").reduced()
+model = build_model(cfg)
+sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
+                                     total_steps=50))
+bf = make_batch_fn(cfg, InputShape("t", "train", 0, 32), mesh=mesh)
+batch = None
+fns, states = {}, {}
+for sname in SCHEDULES:
+    for sh in (False, True):
+        cc = CommConfig(strategy=sname, bucket_mb=0.25, shard_update=sh)
+        step = make_train_step(model, lars.OptConfig(kind="lars"), sched,
+                               mesh=mesh, comm=cc)
+        s0 = st.init_state(model, 0,
+                           sharded_plan=step.bucket_plan if sh else None,
+                           n_shards=step.n_shards if sh else 1)
+        fns[(sname, sh)] = jax.jit(step)
+        states[(sname, sh)] = s0
+        if batch is None:
+            batch = bf(s0.step)
+for k, f in fns.items():
+    jax.block_until_ready(f(states[k], batch))    # compile + warm
+times = {k: [] for k in fns}
+for r in range(ROUNDS):                           # interleave within rounds
+    for k, f in fns.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(states[k], batch))
+        times[k].append(time.perf_counter() - t0)
+for (sname, sh), ts in times.items():
+    print(f"{sname}|{int(sh)},{float(np.median(ts)) * 1e6:.0f}")
+""" % (schedules, rounds)
+    try:
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=900,
+                           env={**os.environ, "PYTHONPATH": "src"})
+    except subprocess.TimeoutExpired:
+        emit("comm.shard_update", (time.perf_counter() - t0) * 1e6,
+             "FAILED: 900s subprocess timeout")
+        return
+    res = dict(line.split(",") for line in r.stdout.strip().splitlines()
+               if "," in line)
+    if not res:
+        emit("comm.shard_update", (time.perf_counter() - t0) * 1e6,
+             f"FAILED: {r.stderr[-200:]}")
+        return
+    model = build_model(get_config("resnet50"))
+    for s in schedules:
+        if f"{s}|0" not in res or f"{s}|1" not in res:
+            emit(f"comm.shard_update_{s}", (time.perf_counter() - t0) * 1e6,
+                 f"MISSING rows: {r.stderr[-120:]}")
+            continue
+        off, on = float(res[f"{s}|0"]), float(res[f"{s}|1"])
+        ar = autotune(model.param_pd, schedule=s, axes=("data",),
+                      sizes=(16,), family="conv")
+        sh = autotune(model.param_pd, schedule=s, axes=("data",),
+                      sizes=(16,), family="conv", shard_update=True)
+        emit(f"comm.shard_update_{s}", on,
+             f"replicated {off:.0f}us -> sharded {on:.0f}us "
+             f"({off/on:.2f}x hostCPU, {rounds} interleaved rounds); v5e "
+             f"16x16 predicted t_step {ar.sim.t_step_s*1e3:.2f}ms -> "
+             f"{sh.sim.t_step_s*1e3:.2f}ms @ {sh.bucket_mb:g}MB")
+
+
+def bench_shard_update_plan(quick: bool):
+    """Pure cost-accounting rows (no training; part of --smoke): the ZeRO-1
+    acceptance numbers — AR(g)+full-update vs RS(g)+update/n+AG(bf16 p)
+    for the ring schedule at each path's autotuned bucket size."""
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("resnet50"))
+    for tag, axes, sizes in [("16x16", ("data",), (16,)),
+                             ("2x16x16", ("pod", "data"), (2, 16))]:
+        t0 = time.perf_counter()
+        ar = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv")
+        sh = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv", shard_update=True)
+        assert sh.sim.t_step_s < ar.sim.t_step_s, (sh.sim, ar.sim)
+        emit(f"comm.shard_update_plan_{tag}",
+             (time.perf_counter() - t0) * 1e6,
+             f"ring AR(g)+update {ar.sim.t_step_s*1e3:.2f}ms -> "
+             f"RS(g)+update/{sizes[-1]}+AG(bf16 p) "
+             f"{sh.sim.t_step_s*1e3:.2f}ms @ {sh.bucket_mb:g}MB "
+             f"(update {ar.sim.t_update_s*1e6:.0f}us -> "
+             f"{sh.sim.t_update_s*1e6:.0f}us, gather "
+             f"{sh.sim.t_gather_s*1e6:.0f}us hidden behind next fwd)")
+
+
 def bench_autotune_plan(quick: bool):
     """Pure cost-model rows (no training): the autotuner's joint
     (schedule x bucket size) pick per production mesh — the plan
@@ -552,12 +677,15 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_bn_momentum_ablation,
        bench_kernel_batched_norm, bench_kernel_smoothed_xent,
        bench_kernel_lars_update, bench_comm_bucketing,
-       bench_comm_schedules, bench_comm_overlap, bench_autotune_plan]
+       bench_comm_schedules, bench_comm_overlap, bench_comm_shard_update,
+       bench_autotune_plan, bench_shard_update_plan]
 
 # --smoke: the CI micro-run — pure-math projections only (no subprocess
 # training, no 8-device compiles), finishes in seconds and emits the JSON
-# artifact that tracks the bench trajectory per-PR
-SMOKE = [bench_table1, bench_fig2, bench_autotune_plan]
+# artifact that tracks the bench trajectory per-PR (including the sharded-
+# update accounting row)
+SMOKE = [bench_table1, bench_fig2, bench_autotune_plan,
+         bench_shard_update_plan]
 
 
 def main() -> None:

@@ -31,7 +31,7 @@ def run(cfg, model, mesh, *, batch, steps, opt, warmup, smoothing):
         mesh=mesh))
     bf = make_batch_fn(cfg, InputShape("t", "train", 0, batch), mesh=mesh)
     s = init_state(model, 0, mesh)
-    for i in range(steps):
+    for _ in range(steps):
         s, m = step(s, bf(s.step))
     ev = jax.jit(make_eval_step(model, mesh=mesh))
     accs = [float(ev(s.params, prototype_imagenet(

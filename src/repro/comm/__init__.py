@@ -8,11 +8,14 @@ wall time from mesh shape, payload bytes, and the link constants in
 ``launch/mesh.py``. ``autotune`` searches bucket size (and schedule)
 against the cost model plus an overlap timeline. See docs/comm.md.
 """
-from repro.comm.registry import available, get_schedule  # noqa: F401
+from repro.comm.registry import (  # noqa: F401
+    available, get_reduce_scatter, get_schedule)
 from repro.comm.cost import (  # noqa: F401
-    CostBreakdown, Link, predict, predict_table)
+    CostBreakdown, Link, lars_update_time_s, predict, predict_all_gather,
+    predict_reduce_scatter, predict_table)
 # NOTE: ``repro.comm.autotune`` stays a *module* attribute here (the
 # bucket-size search entry point is ``repro.comm.autotune.autotune``);
 # only the result types are lifted to the package root.
 from repro.comm.autotune import (  # noqa: F401
-    CANDIDATES_MB, OverlapSim, TunedPlan, best_plan, simulate)
+    CANDIDATES_MB, BackwardProfile, OverlapSim, TunedPlan, best_plan,
+    simulate)

@@ -27,10 +27,23 @@ makes that trade-off a search:
 ``CommConfig(bucket_mb='auto')`` routes through :func:`autotune` at train-
 step build time; ``launch/report.autotune_section`` prints the chosen plan
 per schedule for the production meshes.
+
+Two extensions (docs/comm.md):
+
+* ``backward_profile='measured'`` replaces the volume-apportioned FLOPs
+  model with one *profiled* warm-up step: per-group completion timestamps
+  captured at the overlap group boundaries (``ddp.wrap_params_for_probe``)
+  become a cumulative time-vs-volume curve (:class:`BackwardProfile`) that
+  any candidate plan's group boundaries interpolate into.
+* ``shard_update=True`` prices the ZeRO-1 timeline instead of the
+  all-reduce one: per-bucket reduce-scatter (overlapped with the backward),
+  the 1/n packed update, and the param all-gather (hideable behind the
+  next forward) — RS(g) + AG(p) + update/n vs AR(g) + full update.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -45,13 +58,30 @@ CANDIDATES_MB: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
 
 
 @dataclasses.dataclass(frozen=True)
+class BackwardProfile:
+    """Measured backward-time curve: cumulative wall time at cumulative
+    packed parameter volume (fine-granularity group boundaries, packing
+    order). ``backward_times`` interpolates any plan's boundaries into it,
+    so one profiled step serves every bucket-size candidate."""
+    cum_elems: Tuple[int, ...]
+    cum_time_s: Tuple[float, ...]
+
+    @property
+    def total_s(self) -> float:
+        return self.cum_time_s[-1]
+
+
+@dataclasses.dataclass(frozen=True)
 class OverlapSim:
     """Predicted overlapped-step timeline for one (plan, schedule)."""
     t_backward_s: float          # total backward compute
     t_comm_s: float              # serialized collective time, all buckets
     t_exposed_s: float           # comm left showing after the backward ends
-    t_step_s: float              # backward + exposed comm
+    t_step_s: float              # backward + exposed comm (+ update)
     overlap_eff: float           # fraction of comm hidden: 1 - exposed/comm
+    t_update_s: float = 0.0      # optimizer step (1/n of it when sharded)
+    t_gather_s: float = 0.0      # param all-gather (sharded mode only)
+    mode: str = "allreduce"      # 'allreduce' | 'shard_update'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,12 +96,70 @@ class TunedPlan:
         return self.plan.n_buckets
 
 
-def backward_times(plan: bucketing.BucketPlan,
-                   t_backward_s: float) -> Tuple[float, ...]:
-    """Per-group backward time: the measured (or estimated) total backward
-    wall time apportioned by each group's padded parameter volume."""
+def backward_times(plan: bucketing.BucketPlan, t_backward_s: float,
+                   profile: Optional[BackwardProfile] = None
+                   ) -> Tuple[float, ...]:
+    """Per-group backward time. With a measured ``profile``, each group
+    boundary interpolates the cumulative time-vs-volume curve (rescaled to
+    ``t_backward_s`` so an explicit override still applies); otherwise the
+    total is apportioned by each group's padded parameter volume."""
+    if profile is not None and profile.total_s > 0:
+        xs = np.concatenate([[0.0], np.asarray(profile.cum_elems, float)])
+        ys = np.concatenate([[0.0], np.asarray(profile.cum_time_s, float)])
+        cum = np.interp(np.cumsum(plan.bucket_sizes), xs, ys)
+        cum = cum * (t_backward_s / profile.total_s)
+        return tuple(np.diff(np.concatenate([[0.0], cum])))
     total = float(sum(plan.bucket_sizes)) or 1.0
     return tuple(t_backward_s * s / total for s in plan.bucket_sizes)
+
+
+def measure_backward_profile(loss, params, *, bucket_mb: float =
+                             CANDIDATES_MB[0], warmup: int = 1
+                             ) -> BackwardProfile:
+    """One profiled warm-up step (``backward_profile='measured'``).
+
+    ``loss(params) -> scalar`` is differentiated with every fine-granularity
+    bucket group's params routed through a probing identity
+    (``ddp.wrap_params_for_probe``) plus a backward-start marker on the loss
+    itself; host timestamps recorded as each group's cotangents materialize
+    yield the cumulative backward-time curve. Uses the smallest candidate
+    bucket size so the curve resolves every coarser plan's boundaries."""
+    from repro.core import ddp
+    plan = bucketing.make_plan(params, bucket_mb=bucket_mb)
+    stamps: Dict[int, float] = {}
+
+    def probe(i):
+        stamps.setdefault(int(i), time.perf_counter())
+
+    def wrapped(p):
+        p = ddp.wrap_params_for_probe(p, plan, probe)
+        return ddp.mark_backward_start(loss(p), probe)
+
+    grad_fn = jax.jit(jax.grad(wrapped))
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(grad_fn(params))
+    # debug.callback delivery is async: drain the warm-up runs' callbacks
+    # before clearing, or a late stale stamp would occupy a group's key
+    # (setdefault) and silently skew the measured curve
+    jax.effects_barrier()
+    stamps.clear()
+    jax.block_until_ready(grad_fn(params))
+    jax.effects_barrier()
+    if -1 not in stamps or len(stamps) != plan.n_buckets + 1:
+        raise RuntimeError(
+            f"backward profile incomplete: {sorted(stamps)} of "
+            f"{plan.n_buckets} groups stamped")
+    t0 = stamps.pop(-1)
+    # The timeline model assumes groups complete in packing order (the
+    # §III-C.2 static-group premise), but a real tree's flatten order only
+    # approximates it — so the i-th packing group takes the i-th order
+    # statistic of the measured completion times, keeping the measured
+    # *spacing* without letting one out-of-order group flatten the curve.
+    rel = sorted(max(stamps[i] - t0, 1e-9)
+                 for i in range(plan.n_buckets))
+    return BackwardProfile(tuple(int(c) for c in
+                                 np.cumsum(plan.bucket_sizes)),
+                           tuple(float(t) for t in rel))
 
 
 def backward_flops_per_param(family: Optional[str] = None) -> float:
@@ -99,23 +187,52 @@ def estimate_backward_time(n_params: int, *, per_device_batch: int = 320,
 def simulate(plan: bucketing.BucketPlan, schedule: str,
              axes: Sequence[str], sizes: Sequence[int], *,
              dtype_bytes: int = 2, t_backward_s: float,
-             links: Optional[Dict[str, cost.Link]] = None) -> OverlapSim:
+             links: Optional[Dict[str, cost.Link]] = None,
+             profile: Optional[BackwardProfile] = None,
+             shard_update: bool = False, param_dtype_bytes: int = 2,
+             t_forward_s: Optional[float] = None) -> OverlapSim:
     """Walk the §III-C.2 timeline: groups finish their backward in packing
-    order; each bucket's collective starts at max(grads ready, link free)."""
-    bt = backward_times(plan, t_backward_s)
+    order; each bucket's collective starts at max(grads ready, link free).
+
+    ``shard_update=True`` prices the ZeRO-1 timeline instead: the per-bucket
+    collective is the reduce-scatter-terminal form, the optimizer step runs
+    on 1/n_shards of the buffers, and the param all-gather
+    (``param_dtype_bytes`` per element — bf16 by default) is hideable
+    behind the next forward pass (``t_forward_s``, default backward/2), so
+    only its overhang is charged to the step."""
+    bt = backward_times(plan, t_backward_s, profile)
     ready = np.cumsum(bt)
     free = 0.0
     t_comm = 0.0
+    n_elems = int(sum(plan.bucket_sizes))
     for b, payload in enumerate(plan.bucket_bytes(dtype_bytes)):
-        c = cost.predict(schedule, axes, sizes, payload,
-                         n_buckets=1, links=links).time_s
+        pred = cost.predict_reduce_scatter if shard_update else cost.predict
+        c = pred(schedule, axes, sizes, payload,
+                 n_buckets=1, links=links).time_s
         free = max(float(ready[b]), free) + c
         t_comm += c
     exposed = max(0.0, free - t_backward_s)
+    if not shard_update:
+        t_update = cost.lars_update_time_s(n_elems, 1)
+        t_gather = 0.0
+        mode = "allreduce"
+    else:
+        _, n_shards = cost.shard_axis_size(axes, sizes)
+        t_update = cost.lars_update_time_s(n_elems, n_shards)
+        t_gather = sum(
+            cost.predict_all_gather(axes, sizes, s * param_dtype_bytes,
+                                    links=links).time_s
+            for s in plan.bucket_sizes)
+        t_fwd = (0.5 * t_backward_s if t_forward_s is None else t_forward_s)
+        exposed += max(0.0, t_gather - t_fwd)
+        t_comm += t_gather
+        mode = "shard_update"
     eff = min(1.0, max(0.0, 1.0 - exposed / t_comm)) if t_comm > 0 else 1.0
     return OverlapSim(t_backward_s=t_backward_s, t_comm_s=t_comm,
-                      t_exposed_s=exposed, t_step_s=t_backward_s + exposed,
-                      overlap_eff=eff)
+                      t_exposed_s=exposed,
+                      t_step_s=t_backward_s + exposed + t_update,
+                      overlap_eff=eff, t_update_s=t_update,
+                      t_gather_s=t_gather, mode=mode)
 
 
 def autotune(tree, *, schedule: str, axes: Sequence[str],
@@ -123,22 +240,31 @@ def autotune(tree, *, schedule: str, axes: Sequence[str],
              t_backward_s: Optional[float] = None,
              family: Optional[str] = None,
              candidates: Sequence[float] = CANDIDATES_MB,
-             links: Optional[Dict[str, cost.Link]] = None) -> TunedPlan:
+             links: Optional[Dict[str, cost.Link]] = None,
+             profile: Optional[BackwardProfile] = None,
+             shard_update: bool = False,
+             param_dtype_bytes: int = 2) -> TunedPlan:
     """Best bucket size for one schedule on one mesh. ``tree`` is the
     parameter (descriptor) pytree the plans are built from; ``family``
     (configs ModelConfig.family) refines the backward-time default when no
-    measured ``t_backward_s`` is given."""
+    measured ``t_backward_s``/``profile`` is given; ``shard_update`` prices
+    the ZeRO-1 RS(g)+update/n+AG(p) timeline instead of AR(g)+update."""
     if t_backward_s is None:
-        n_params = sum(int(np.prod(leaf.shape)) if leaf.shape else 1
-                       for leaf in jax.tree.leaves(tree))
-        t_backward_s = estimate_backward_time(
-            n_params, flops_per_param=backward_flops_per_param(family))
+        if profile is not None:
+            t_backward_s = profile.total_s
+        else:
+            n_params = sum(int(np.prod(leaf.shape)) if leaf.shape else 1
+                           for leaf in jax.tree.leaves(tree))
+            t_backward_s = estimate_backward_time(
+                n_params, flops_per_param=backward_flops_per_param(family))
     best = None
     for mb in candidates:
         plan = bucketing.make_plan(tree, bucket_mb=mb,
                                    dtype_bytes=dtype_bytes)
         sim = simulate(plan, schedule, axes, sizes, dtype_bytes=dtype_bytes,
-                       t_backward_s=t_backward_s, links=links)
+                       t_backward_s=t_backward_s, links=links,
+                       profile=profile, shard_update=shard_update,
+                       param_dtype_bytes=param_dtype_bytes)
         key = (sim.t_step_s, plan.n_buckets)
         if best is None or key < best[0]:
             best = (key, TunedPlan(schedule=schedule, bucket_mb=mb,
@@ -151,7 +277,10 @@ def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
               schedules: Optional[Sequence[str]] = None,
               dtype_bytes: int = 2, t_backward_s: Optional[float] = None,
               family: Optional[str] = None,
-              links: Optional[Dict[str, cost.Link]] = None) -> TunedPlan:
+              links: Optional[Dict[str, cost.Link]] = None,
+              profile: Optional[BackwardProfile] = None,
+              shard_update: bool = False,
+              param_dtype_bytes: int = 2) -> TunedPlan:
     """Joint (schedule x bucket size) search over every registered schedule
     that has a cost model — what the dry-run comm table reports."""
     if schedules is None:
@@ -162,7 +291,9 @@ def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
         try:
             t = autotune(tree, schedule=s, axes=axes, sizes=sizes,
                          dtype_bytes=dtype_bytes, t_backward_s=t_backward_s,
-                         family=family, links=links)
+                         family=family, links=links, profile=profile,
+                         shard_update=shard_update,
+                         param_dtype_bytes=param_dtype_bytes)
         except KeyError:          # registered but uncosted schedule
             continue
         key = (t.sim.t_step_s, t.n_buckets)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Sequence, Tuple
 
-from repro.launch.mesh import DCI_ALPHA, DCI_BW, ICI_ALPHA, ICI_BW
+from repro.launch.mesh import DCI_ALPHA, DCI_BW, HBM_BW, ICI_ALPHA, ICI_BW
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +124,96 @@ def predict(schedule: str, axes: Sequence[str], sizes: Sequence[int],
         wire_bytes=sum(p.wire_bytes for p in ph) * n_buckets,
         phases=tuple(ph),
     )
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 sharded-update accounting: RS(g) + AG(p) vs AR(g)  (docs/comm.md)
+
+def shard_axis_size(axes: Sequence[str], sizes: Sequence[int]):
+    """(axis, size) the sharded-update path scatters over: the innermost
+    non-trivial axis — mirrors ``schedules.shard_axis``."""
+    for a, s in zip(reversed(tuple(axes)), reversed(tuple(sizes))):
+        if s > 1:
+            return a, s
+    return tuple(axes)[-1], tuple(sizes)[-1]
+
+
+def predict_reduce_scatter(schedule: str, axes: Sequence[str],
+                           sizes: Sequence[int], payload_bytes: float, *,
+                           n_buckets: int = 1,
+                           links: Dict[str, Link] = None) -> CostBreakdown:
+    """Predicted wall time of the schedule's reduce-scatter-terminal form
+    (``registry.get_reduce_scatter``): ring/2d_torus/hierarchical stop at
+    their native scatter (half the shard-axis wire bytes of the full
+    all-reduce); psum/dbtree reduce-then-slice, so their cost equals the
+    full all-reduce — the slice is free."""
+    assert len(axes) == len(sizes)
+    links = links or default_links(axes)
+    if schedule in ("psum", "bucketed", "dbtree"):
+        r = predict(schedule, axes, sizes, payload_bytes,
+                    n_buckets=n_buckets, links=links)
+        return dataclasses.replace(r, schedule=f"{r.schedule}+slice")
+    if schedule not in ("ring", "hierarchical", "2d_torus"):
+        raise KeyError(f"no reduce-scatter cost model for {schedule!r}")
+    B = payload_bytes / n_buckets
+    intra, n = shard_axis_size(axes, sizes)
+    shard = B / max(n, 1)
+    ph = []
+    if n > 1:
+        ph.append(Phase(f"ring-rs[{intra}]", n - 1, B * (n - 1) / n,
+                        links[intra]))
+    outer = [(a, s) for a, s in zip(axes, sizes) if a != intra and s > 1]
+    if schedule == "hierarchical":
+        p = 1
+        for _, s in outer:
+            p *= s
+        if p > 1:
+            ph.append(Phase("ring-ar[pods-fused]", 2 * (p - 1),
+                            2 * shard * (p - 1) / p,
+                            _slowest([links[a] for a, _ in outer])))
+    else:   # ring / 2d_torus: explicit shard ring per remaining axis
+        for a, s in reversed(outer):
+            ph.append(Phase(f"ring-ar[{a}]", 2 * (s - 1),
+                            2 * shard * (s - 1) / s, links[a]))
+    return CostBreakdown(
+        schedule=f"{schedule}-rs",
+        time_s=sum(p.time_s(n_buckets) for p in ph),
+        n_messages=sum(p.messages for p in ph) * n_buckets,
+        wire_bytes=sum(p.wire_bytes for p in ph) * n_buckets,
+        phases=tuple(ph),
+    )
+
+
+def predict_all_gather(axes: Sequence[str], sizes: Sequence[int],
+                       payload_bytes: float, *, n_buckets: int = 1,
+                       links: Dict[str, Link] = None) -> CostBreakdown:
+    """Ring all-gather of ``payload_bytes`` (the full buffer size, e.g. the
+    bf16 params) along the shard axis — the gather phase every sharded
+    update pays, regardless of which schedule ran the scatter. Shards are
+    already identical across the other axes, so only the shard-axis ring
+    moves bytes."""
+    links = links or default_links(axes)
+    intra, n = shard_axis_size(axes, sizes)
+    ph = []
+    if n > 1:
+        ph.append(Phase(f"ring-ag[{intra}]", n - 1,
+                        payload_bytes / n_buckets * (n - 1) / n,
+                        links[intra]))
+    return CostBreakdown(
+        schedule="all-gather",
+        time_s=sum(p.time_s(n_buckets) for p in ph),
+        n_messages=sum(p.messages for p in ph) * n_buckets,
+        wire_bytes=sum(p.wire_bytes for p in ph) * n_buckets,
+        phases=tuple(ph),
+    )
+
+
+def lars_update_time_s(n_elems: int, n_shards: int = 1) -> float:
+    """Memory-bound model of the packed fp32 optimizer step: read p/g/m +
+    write p/m = 5 fp32 streams over this device's 1/n_shards slice at HBM
+    bandwidth. The n_shards=1 case prices the replicated update every
+    device redundantly runs on the all-reduce path."""
+    return 5 * 4 * (n_elems / max(n_shards, 1)) / HBM_BW
 
 
 def predict_table(axes: Sequence[str], sizes: Sequence[int],

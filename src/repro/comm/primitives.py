@@ -87,6 +87,29 @@ def ring_all_reduce(x, axis, *, step_fn=None, pad_to: int = 1):
     return ring_all_gather(shard, axis, L)
 
 
+def shard_index(axis):
+    """Which chunk of an ``n``-chunked buffer this device owns under the
+    ring reduce-scatter layout: ``(r + 1) % n`` (see ring_reduce_scatter).
+    The ZeRO-1 sharded-update path uses this to address per-shard segment
+    maps and to slice the matching master-param shard."""
+    n = axis_size(axis)
+    if n == 1:
+        return jnp.int32(0)
+    return (jax.lax.axis_index(axis) + 1) % n
+
+
+def slice_own_chunk(x, axis, *, pad_to: int = 1):
+    """Fallback reduce-scatter tail for schedules without a native scatter
+    (psum/dbtree): view the *already fully reduced* buffer as ``(n, c)``
+    chunk rows and keep the chunk this device owns under the ring layout,
+    so ``ring_all_gather`` reassembles it identically."""
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    chunks = _as_chunks(x, n, pad_to)
+    return jnp.take(chunks, shard_index(axis), axis=0)
+
+
 # --------------------------------------------------------------------------
 # binomial trees (the dbtree schedule's building block)
 

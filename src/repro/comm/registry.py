@@ -10,6 +10,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 _SCHEDULES: Dict[str, Callable] = {}
+_RS_SCHEDULES: Dict[str, Callable] = {}   # reduce-scatter-terminal forms
 
 # legacy ddp strategy names that map onto registered schedules
 ALIASES = {"bucketed": "psum"}
@@ -23,6 +24,17 @@ def register(name: str):
     return deco
 
 
+def register_rs(name: str):
+    """Register a schedule's reduce-scatter-terminal form (ZeRO-1 path):
+    same signature, but returns each device's contiguous CHUNK-aligned
+    shard of the summed buffer instead of the full reduction."""
+    def deco(fn: Callable) -> Callable:
+        assert name not in _RS_SCHEDULES, f"duplicate rs schedule {name!r}"
+        _RS_SCHEDULES[name] = fn
+        return fn
+    return deco
+
+
 def get_schedule(name: str) -> Callable:
     name = ALIASES.get(name, name)
     # importing schedules populates the registry lazily (avoids import cycle)
@@ -32,6 +44,19 @@ def get_schedule(name: str) -> Callable:
         raise KeyError(
             f"unknown comm schedule {name!r}; available: {available()}")
     return _SCHEDULES[name]
+
+
+def get_reduce_scatter(name: str) -> Callable:
+    """Resolve a schedule's reduce-scatter-terminal form (every registered
+    schedule has one: ring/2d_torus natively, psum/dbtree/hierarchical via
+    reduce-then-slice fallbacks in ``schedules.py``)."""
+    name = ALIASES.get(name, name)
+    if not _RS_SCHEDULES:
+        from repro.comm import schedules  # noqa: F401
+    if name not in _RS_SCHEDULES:
+        raise KeyError(f"no reduce-scatter form for schedule {name!r}; "
+                       f"available: {sorted(_RS_SCHEDULES)}")
+    return _RS_SCHEDULES[name]
 
 
 def available() -> List[str]:

@@ -30,14 +30,34 @@ Registered schedules:
 ``use_kernel=True`` swaps the reduce-scatter inner fold for the Pallas
 ring-step kernel (``repro.comm.ring_kernel``), which requires CHUNK-aligned
 chunk rows — the schedules pass ``pad_to=CHUNK`` to the primitives.
+
+Every schedule also has a **reduce-scatter-terminal form** (``@register_rs``,
+resolved via ``registry.get_reduce_scatter``) for the ZeRO-1 sharded-update
+path: instead of the full reduction it returns this device's contiguous
+CHUNK-aligned 1/n shard of the summed buffer, sharded over the innermost
+non-trivial axis (``shard_axis``) under the ring layout
+(``primitives.shard_index``) and already reduced over every other axis.
+ring/2d_torus stop at their native scatter; psum/dbtree/hierarchical fall
+back to reduce-then-slice where no cheaper form exists.
 """
 from __future__ import annotations
 
 import jax
 
 from repro.core.bucketing import CHUNK
+from repro.core.compat import axis_size
 from repro.comm import primitives as prim
-from repro.comm.registry import register
+from repro.comm.registry import register, register_rs
+
+
+def shard_axis(axes) -> str:
+    """The axis the ZeRO-1 shards live on: the innermost (best-connected)
+    axis of size > 1, so the scatter actually splits the buffer even on
+    meshes with trailing trivial axes (the local ``(data, model=1)`` mesh)."""
+    for a in reversed(tuple(axes)):
+        if axis_size(a) > 1:
+            return a
+    return tuple(axes)[-1]
 
 
 def _step_fn(use_kernel: bool, interpret):
@@ -94,3 +114,84 @@ def torus_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
         shard = prim.ring_all_reduce(shard, axis, step_fn=step_fn,
                                      pad_to=pad_to)
     return prim.ring_all_gather(shard, intra, n)
+
+
+# --------------------------------------------------------------------------
+# reduce-scatter-terminal forms (ZeRO-1 sharded-update path, docs/comm.md)
+#
+# Contract: fn(buf, axes, *, use_kernel, interpret) -> shard, where shard is
+# this device's contiguous CHUNK-aligned 1/n slice of the summed buffer
+# (n = size of shard_axis(axes), ring layout: device r owns chunk (r+1)%n),
+# already reduced over every other axis, so the shard is identical across
+# them and ``primitives.ring_all_gather(shard, shard_axis, L)`` rebuilds the
+# full buffer from the shard_axis ring alone.
+
+def _rs_split(axes):
+    intra = shard_axis(axes)
+    rest = tuple(a for a in axes if a != intra)
+    return intra, rest
+
+
+@register_rs("psum")
+def psum_reduce_scatter(buf, axes, *, use_kernel: bool = False,
+                        interpret=None):
+    """No native scatter: one fused all-reduce, keep the owned chunk."""
+    buf = jax.lax.psum(buf, tuple(axes))
+    return prim.slice_own_chunk(buf, shard_axis(axes), pad_to=CHUNK)
+
+
+@register_rs("ring")
+def ring_reduce_scatter_schedule(buf, axes, *, use_kernel: bool = False,
+                                 interpret=None):
+    """Native: ring reduce-scatter on the shard axis, ring all-reduce of
+    the 1/n shard along the remaining axes — half the wire bytes of the
+    full ring all-reduce on the shard axis."""
+    intra, rest = _rs_split(axes)
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    shard, _ = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
+                                        pad_to=max(pad_to, CHUNK))
+    for axis in reversed(rest):
+        shard = prim.ring_all_reduce(shard, axis, step_fn=step_fn,
+                                     pad_to=pad_to)
+    return shard
+
+
+@register_rs("hierarchical")
+def hierarchical_reduce_scatter(buf, axes, *, use_kernel: bool = False,
+                                interpret=None):
+    """Ring reduce-scatter within the shard axis, fused psum across the
+    outer axes on the shard (the hierarchical schedule minus its final
+    all-gather)."""
+    intra, rest = _rs_split(axes)
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    shard, _ = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
+                                        pad_to=max(pad_to, CHUNK))
+    if rest:
+        shard = jax.lax.psum(shard, rest)
+    return shard
+
+
+@register_rs("2d_torus")
+def torus_reduce_scatter(buf, axes, *, use_kernel: bool = False,
+                         interpret=None):
+    """Identical scatter phase to the torus all-reduce: ring reduce-scatter
+    on the shard axis, explicit ring all-reduce of the shard per
+    orthogonal axis."""
+    intra, rest = _rs_split(axes)
+    step_fn, pad_to = _step_fn(use_kernel, interpret)
+    shard, _ = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
+                                        pad_to=max(pad_to, CHUNK))
+    for axis in reversed(rest):
+        shard = prim.ring_all_reduce(shard, axis, step_fn=step_fn,
+                                     pad_to=pad_to)
+    return shard
+
+
+@register_rs("dbtree")
+def dbtree_reduce_scatter(buf, axes, *, use_kernel: bool = False,
+                          interpret=None):
+    """The tree fold has no scatter decomposition: full double-binary-tree
+    all-reduce per axis, then keep the owned chunk."""
+    for axis in reversed(axes):
+        buf = prim.tree_all_reduce(buf, axis)
+    return prim.slice_own_chunk(buf, shard_axis(axes), pad_to=CHUNK)

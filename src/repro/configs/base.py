@@ -29,15 +29,37 @@ class CommConfig:
     the backward pass, as soon as its layer group's gradients are complete
     (§III-C.2); ``False`` reproduces the post-backward PR-2 path. Ignored
     by 'xla' and 'naive'.
+
+    ``shard_update=True`` (ZeRO-1; docs/comm.md §Sharded update) stops the
+    gradient collective at the reduce-scatter: each device runs the packed
+    LARS/SGD-M update on its contiguous 1/n shard of the bucket buffers
+    (momentum stored sharded), then all-gathers the updated params —
+    RS(g)+AG(p) on the wire instead of AR(g), optimizer FLOPs and fp32
+    momentum memory cut by the shard count. Explicit-DP schedules only
+    (ignored by 'xla'/'naive'); ``update_kernel=True`` routes the shard
+    update through the fused ``kernels/lars_update`` Pallas kernel.
+    Caveat: with the default bf16 wire the gathered *masters* round-trip
+    through bf16 every step — use ``wire_dtype='f32'`` for long runs
+    until master shards persist across steps (see docs/comm.md).
+
+    ``backward_profile`` selects how the autotuner apportions backward
+    time over bucket groups when ``bucket_mb='auto'``: 'model' (the
+    family-aware FLOPs model) or 'measured' (one profiled warm-up step
+    captured at the overlap group boundaries — needs a ``profile_batch``).
     """
     strategy: str = "xla"
     bucket_mb: float = 4.0       # the paper's "several megabytes", | 'auto'
     wire_dtype: str = "bf16"     # bf16 | f32 on the wire (paper §IV)
     use_kernel: bool = False     # Pallas ring-step fold (comm/ring_kernel)
     overlap: bool = True         # issue bucket collectives inside backward
+    shard_update: bool = False   # ZeRO-1: RS(g) + sharded update + AG(p)
+    update_kernel: bool = False  # fused lars_update Pallas kernel on shards
+    backward_profile: str = "model"   # 'model' | 'measured' (autotune)
 
     def __post_init__(self):
         assert self.wire_dtype in ("bf16", "f32"), self.wire_dtype
+        assert self.backward_profile in ("model", "measured"), \
+            self.backward_profile
         if isinstance(self.bucket_mb, str):
             assert self.bucket_mb == "auto", self.bucket_mb
         else:

@@ -108,12 +108,16 @@ def pack(tree, plan: BucketPlan, dtype=jnp.bfloat16) -> List[jax.Array]:
 
 
 def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):
-    """Inverse of ``pack`` (buffers -> pytree in original structure)."""
+    """Inverse of ``pack`` (buffers -> pytree in original structure). Like
+    ``unpack_group``, the target dtype is applied once per packed buffer."""
+    from repro.core.precision import grads_to_master
+    bufs = [grads_to_master(b) if dtype == jnp.float32 else b.astype(dtype)
+            for b in bufs]
     leaves = []
     for slot in plan.slots:
         flat = jax.lax.dynamic_slice_in_dim(bufs[slot.bucket], slot.offset,
                                             slot.padded)
-        leaves.append(flat[:slot.size].reshape(slot.shape).astype(dtype))
+        leaves.append(flat[:slot.size].reshape(slot.shape))
     return jax.tree_util.tree_unflatten(plan.treedef, list(reversed(leaves)))
 
 
@@ -123,8 +127,10 @@ def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
 
     Staged in f32: XLA's CPU backend lowers bf16 concatenate /
     dynamic-update-slice to scalar loops (~15x slower than f32), so the
-    buffer is assembled in f32 and cast to the wire dtype once per bucket —
-    the payload that crosses the links is still ``dtype``."""
+    buffer is assembled in f32 and the comm dtype is applied ONCE on the
+    packed buffer (``precision.grads_to_comm``) — the payload that crosses
+    the links is still ``dtype``."""
+    from repro.core.precision import grads_to_comm
     stage = jnp.float32 if dtype == jnp.bfloat16 else dtype
     parts = []
     for slot, leaf in zip(slots, leaves):
@@ -133,13 +139,17 @@ def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
             flat = jnp.concatenate(
                 [flat, jnp.zeros(slot.padded - slot.size, stage)])
         parts.append(flat)
-    return jnp.concatenate(parts).astype(dtype)
+    return grads_to_comm(jnp.concatenate(parts), dtype=dtype)
 
 
 def unpack_group(buf: jax.Array, slots, dtype=jnp.float32):
-    """Inverse of ``pack_group``: flat buffer -> list of leaves."""
-    return [buf[s.offset:s.offset + s.padded][:s.size]
-            .reshape(s.shape).astype(dtype) for s in slots]
+    """Inverse of ``pack_group``: flat buffer -> list of leaves. The master
+    dtype is applied once on the packed buffer (``precision.grads_to_master``
+    for the fp32 master policy) before slicing, not per tensor."""
+    from repro.core.precision import grads_to_master
+    buf = grads_to_master(buf) if dtype == jnp.float32 else buf.astype(dtype)
+    return [buf[s.offset:s.offset + s.padded][:s.size].reshape(s.shape)
+            for s in slots]
 
 
 def segment_ids(plan: BucketPlan) -> np.ndarray:
@@ -153,3 +163,52 @@ def segment_ids(plan: BucketPlan) -> np.ndarray:
 
 def concat_buckets(bufs: List[jax.Array]) -> jax.Array:
     return jnp.concatenate(bufs) if len(bufs) > 1 else bufs[0]
+
+
+# --------------------------------------------------------------------------
+# shard-aware layout (ZeRO-1 sharded-update path, docs/comm.md)
+#
+# A bucket of L elements sharded n ways is zero-padded to n * shard_elems
+# and viewed as n contiguous CHUNK-aligned shards; shard k covers elements
+# [k * c, (k + 1) * c). This matches comm.primitives.ring_reduce_scatter's
+# chunk view exactly, so a reduce-scatter-terminal schedule's output IS
+# shard k = (r + 1) % n of this layout.
+
+def shard_elems(bucket_elems: int, n_shards: int) -> int:
+    """Per-shard element count c: bucket padded to ``n_shards * c`` with
+    ``c`` CHUNK-aligned (the schedules' ``pad_to=CHUNK`` contract)."""
+    return -(-bucket_elems // (n_shards * CHUNK)) * CHUNK
+
+
+def pad_to_shards(buf: jax.Array, n_shards: int) -> jax.Array:
+    """Zero-pad one packed bucket buffer to the sharded layout length."""
+    c = shard_elems(buf.shape[0], n_shards)
+    if n_shards * c != buf.shape[0]:
+        buf = jnp.pad(buf, (0, n_shards * c - buf.shape[0]))
+    return buf
+
+
+def shard_segment_ids(plan: BucketPlan, n_shards: int) -> List[np.ndarray]:
+    """Per-bucket shard-aware segment maps: one ``(n_shards,
+    chunks_per_shard)`` int32 array per bucket whose row k holds the
+    *global* tensor index (position in ``plan.slots``) of each CHUNK in
+    shard k. Padding chunks past the bucket's last tensor keep the last
+    tensor's id — harmless, their p/g/m elements are zeros, so the packed
+    update is a no-op there."""
+    out = []
+    for b, size in enumerate(plan.bucket_sizes):
+        c = shard_elems(size, n_shards)
+        ids = []
+        for ti, slot in enumerate(plan.slots):
+            if slot.bucket == b:
+                ids.extend([ti] * (slot.padded // CHUNK))
+        total = n_shards * c // CHUNK
+        ids.extend([ids[-1]] * (total - len(ids)))
+        out.append(np.asarray(ids, np.int32).reshape(n_shards, c // CHUNK))
+    return out
+
+
+def trust_scaled_mask(plan: BucketPlan) -> np.ndarray:
+    """Static per-tensor bool mask, indexed like ``plan.slots``: True where
+    LARS trust scaling applies (>= 2-D tensors, matching lars._is_scaled)."""
+    return np.asarray([len(s.shape) >= 2 for s in plan.slots], bool)

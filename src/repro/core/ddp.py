@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import bucketing
 from repro.core.compat import axes_size
-from repro.core.precision import grads_to_comm
+from repro.core.precision import grads_to_comm, grads_to_master
 
 
 def allreduce_grads(grads, *, strategy: str, axes: Sequence[str],
@@ -88,6 +88,26 @@ def _overlap_bucket_fn(slots, schedule, axes, comm_dtype, use_kernel,
     return bucket_identity
 
 
+def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn):
+    """Route each bucket group's param leaves through the identity built by
+    ``make_group_fn(group_index, group_slots)`` — the shared scaffolding of
+    the overlap and probe wraps, including the subtle slot-to-leaf mapping
+    (slot i describes leaf n-1-i: the plan walks reverse flatten order)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n_leaves = len(leaves)
+    assert n_leaves == plan.n_tensors
+    new_leaves = list(leaves)
+    leaf_idx = {id(slot): n_leaves - 1 - i
+                for i, slot in enumerate(plan.slots)}
+    for gi, group in enumerate(plan.groups):
+        idxs = [leaf_idx[id(s)] for s in group]
+        fn = make_group_fn(gi, group)
+        outs = fn(tuple(leaves[j] for j in idxs))
+        for j, o in zip(idxs, outs):
+            new_leaves[j] = o
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
 def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
                             strategy: str, axes: Sequence[str],
                             comm_dtype=jnp.bfloat16, use_kernel: bool = False,
@@ -108,18 +128,98 @@ def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
     function, itself inside ``shard_map`` over ``axes``."""
     from repro.comm import get_schedule
     schedule = get_schedule(strategy)
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    n_leaves = len(leaves)
-    assert n_leaves == plan.n_tensors
-    new_leaves = list(leaves)
-    # slot i describes leaf n-1-i (the plan walks reverse flatten order)
-    leaf_idx = {id(slot): n_leaves - 1 - i
-                for i, slot in enumerate(plan.slots)}
-    for group in plan.groups:
-        idxs = [leaf_idx[id(s)] for s in group]
-        fn = _overlap_bucket_fn(group, schedule, tuple(axes), comm_dtype,
-                                use_kernel, interpret)
-        outs = fn(tuple(leaves[j] for j in idxs))
-        for j, o in zip(idxs, outs):
-            new_leaves[j] = o
-    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return _wrap_param_groups(
+        params, plan,
+        lambda gi, group: _overlap_bucket_fn(group, schedule, tuple(axes),
+                                             comm_dtype, use_kernel,
+                                             interpret))
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 sharded-update path (CommConfig.shard_update; docs/comm.md)
+
+def reduce_scatter_grads(grads, *, strategy: str, axes: Sequence[str],
+                         plan: "bucketing.BucketPlan",
+                         comm_dtype=jnp.bfloat16, use_kernel: bool = False,
+                         interpret: bool = None):
+    """Scatter phase: pack gradients into the bucket plan and stop each
+    bucket's collective at the reduce-scatter. Returns one fp32
+    reduced-MEAN shard per bucket — this device's contiguous CHUNK-aligned
+    1/n slice (``comm.primitives.shard_index`` layout), already reduced
+    over every non-shard axis. Must be called inside shard_map."""
+    from repro.comm import get_reduce_scatter
+    rs = get_reduce_scatter(strategy)
+    n = axes_size(axes)
+    bufs = bucketing.pack(grads, plan, dtype=comm_dtype)
+    return [grads_to_master(rs(b, tuple(axes), use_kernel=use_kernel,
+                               interpret=interpret)) / n for b in bufs]
+
+
+def all_gather_params(param_shards, plan: "bucketing.BucketPlan", *,
+                      shard_axis: str, wire_dtype=jnp.bfloat16):
+    """Gather phase: cast each updated fp32 master shard to the wire dtype
+    once (bf16 by default — half the bytes of the fp32 grad all-gather the
+    replicated path pays), ring all-gather along the shard axis, and unpack
+    into the full param pytree. One independent collective per bucket, so
+    a latency-hiding scheduler can slide each gather under surrounding
+    compute. Must be called inside shard_map."""
+    from repro.comm import primitives as prim
+    bufs = []
+    for b, shard in enumerate(param_shards):
+        wire = grads_to_comm(shard, dtype=wire_dtype)
+        bufs.append(prim.ring_all_gather(wire, shard_axis,
+                                         plan.bucket_sizes[b]))
+    return bucketing.unpack(bufs, plan, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# backward-profile probes (comm/autotune.measure_backward_profile)
+
+def _probe_bucket_fn(group_idx: int, probe):
+    @jax.custom_vjp
+    def bucket_identity(leaves):
+        return leaves
+
+    def fwd(leaves):
+        return leaves, None
+
+    def bwd(_, gs):
+        # tie the callback to the cotangent values so it fires exactly when
+        # this group's gradients materialize, not at trace time
+        dep = jnp.int32(0)
+        for g in gs:
+            dep = dep + (g.reshape(-1)[0] * 0).astype(jnp.int32)
+        jax.debug.callback(probe, jnp.int32(group_idx) + dep)
+        return (gs,)
+
+    bucket_identity.defvjp(fwd, bwd)
+    return bucket_identity
+
+
+def wrap_params_for_probe(params, plan: "bucketing.BucketPlan", probe):
+    """Measurement twin of ``wrap_params_for_overlap``: the same per-group
+    custom-vjp identities, but the backward rule calls ``probe(group_idx)``
+    on the host at the moment the group's cotangents exist (and passes them
+    through unchanged) — the capture points for the measured backward
+    profile. Runs anywhere (no collectives, no shard_map needed)."""
+    return _wrap_param_groups(
+        params, plan, lambda gi, group: _probe_bucket_fn(gi, probe))
+
+
+def mark_backward_start(loss, probe, idx: int = -1):
+    """Identity on the scalar loss whose VJP stamps ``probe(idx)`` when the
+    backward pass begins (the cotangent of the loss is the first value the
+    backward produces)."""
+    @jax.custom_vjp
+    def ident(v):
+        return v
+
+    def fwd(v):
+        return v, None
+
+    def bwd(_, ct):
+        jax.debug.callback(probe, jnp.int32(idx) + (ct * 0).astype(jnp.int32))
+        return (ct,)
+
+    ident.defvjp(fwd, bwd)
+    return ident(loss)

@@ -12,6 +12,13 @@ trust scaling, as in the paper/MLPerf reference.
 Per-tensor norms are computed either the plain-jnp way or via the
 ``batched_norm`` Pallas kernel (paper §III-B.2) over the bucket-packed
 buffer — selected with ``use_kernel``.
+
+``sharded_update`` is the ZeRO-1 path (docs/comm.md §Sharded update): trust
+ratios come from psum'd per-tensor *partial* norms over each device's
+bucket shard, and the packed update runs on the local 1/n shard only —
+through the fused ``kernels/lars_update`` Pallas kernel or its packed-jnp
+oracle — so optimizer FLOPs and fp32 momentum memory shrink by the shard
+count.
 """
 from __future__ import annotations
 
@@ -130,3 +137,78 @@ def update(params, grads, mom, lr, cfg: OptConfig):
     new_mom = jax.tree.map(lambda t: t[1], out,
                            is_leaf=lambda x: isinstance(x, tuple))
     return new_params, new_mom
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 sharded update (explicit-DP path; see core/ddp.py + docs/comm.md)
+
+def shard_trust_ratios(param_shards, grad_shards, segs, plan, cfg: OptConfig,
+                       *, shard_axis):
+    """Per-tensor LARS trust ratios from psum'd partial norms.
+
+    Each device holds one contiguous shard per bucket; a tensor's squared
+    norm is the psum (over the shard axis) of each shard's per-CHUNK
+    partial sums, routed to the tensor via the shard-aware segment map —
+    no device ever touches a full gradient. Returns a ``(n_tensors,)`` f32
+    trust vector indexed like ``plan.slots`` (1.0 for <2-D tensors and for
+    sgdm, matching ``update``'s per-tensor rules)."""
+    from repro.core import bucketing
+    from repro.kernels.ref import batched_sumsq
+    if cfg.kind != "lars":
+        return jnp.ones((plan.n_tensors,), jnp.float32)
+    w_sq = jnp.zeros((plan.n_tensors,), jnp.float32)
+    g_sq = jnp.zeros((plan.n_tensors,), jnp.float32)
+    for p_s, g_s, seg in zip(param_shards, grad_shards, segs):
+        w_sq = w_sq + batched_sumsq(p_s, seg, plan.n_tensors)
+        g_sq = g_sq + batched_sumsq(g_s, seg, plan.n_tensors)
+    w_sq = jax.lax.psum(w_sq, shard_axis)
+    g_sq = jax.lax.psum(g_sq, shard_axis)
+    wn, gn = jnp.sqrt(w_sq), jnp.sqrt(g_sq)
+    raw = cfg.trust_coef * wn / (gn + cfg.weight_decay * wn + cfg.eps)
+    scaled = jnp.asarray(bucketing.trust_scaled_mask(plan))
+    return jnp.where(scaled & (wn > 0), raw, 1.0)
+
+
+def sharded_update(params, grad_shards, mom_shards, lr, cfg: OptConfig,
+                   plan, *, shard_axis, n_shards: int,
+                   update_kernel: bool = False, interpret: bool = None):
+    """One ZeRO-1 optimizer step on this device's bucket shards (must run
+    inside shard_map).
+
+    ``grad_shards``/``mom_shards``: per-bucket local fp32 buffers of
+    ``bucketing.shard_elems`` length (the reduce-scatter-terminal schedule
+    output / the sharded momentum leaves). The fp32 masters are packed and
+    the local shard sliced under the ring layout
+    (``comm.primitives.shard_index``); the packed update then touches only
+    1/n of every buffer. Returns ``(param_shards, mom_shards)`` — the
+    caller all-gathers the param shards back (``ddp.all_gather_params``)."""
+    from repro.comm.primitives import shard_index
+    from repro.core import bucketing
+    assert cfg.kind in ("lars", "sgdm"), \
+        f"sharded_update supports lars/sgdm, not {cfg.kind!r}"
+    assert not cfg.nesterov, "nesterov momentum unsupported on shards"
+    k = shard_index(shard_axis)
+    seg_maps = bucketing.shard_segment_ids(plan, n_shards)
+    p_bufs = bucketing.pack(params, plan, dtype=jnp.float32)
+    p_shards, segs = [], []
+    for b, buf in enumerate(p_bufs):
+        c = bucketing.shard_elems(plan.bucket_sizes[b], n_shards)
+        padded = bucketing.pad_to_shards(buf, n_shards)
+        p_shards.append(jax.lax.dynamic_slice_in_dim(padded, k * c, c))
+        segs.append(jnp.take(jnp.asarray(seg_maps[b]), k, axis=0))
+    trust = shard_trust_ratios(p_shards, grad_shards, segs, plan, cfg,
+                               shard_axis=shard_axis)
+    if update_kernel:
+        from repro.kernels.backend import resolve_interpret
+        from repro.kernels.lars_update import lars_packed_update
+        mode = resolve_interpret() if interpret is None else interpret
+        upd = lambda *a, **kw: lars_packed_update(*a, interpret=mode, **kw)
+    else:
+        from repro.kernels.ref import lars_packed_update as upd
+    new_p, new_m = [], []
+    for p_s, g_s, m_s, seg in zip(p_shards, grad_shards, mom_shards, segs):
+        p2, m2 = upd(p_s, g_s, m_s, trust, seg, lr=lr,
+                     momentum=cfg.momentum, wd=cfg.weight_decay)
+        new_p.append(p2)
+        new_m.append(m2)
+    return tuple(new_p), tuple(new_m)

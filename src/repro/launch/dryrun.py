@@ -118,10 +118,13 @@ def main():
     args = ap.parse_args()
 
     if args.comm_table:
-        from repro.launch.report import autotune_section, comm_section
+        from repro.launch.report import (autotune_section, comm_section,
+                                         shard_update_section)
         print(comm_section())
         print()
         print(autotune_section())
+        print()
+        print(shard_update_section())
         return
 
     archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")

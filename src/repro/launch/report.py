@@ -180,19 +180,55 @@ def autotune_section(arch: str = "resnet50") -> str:
     return "\n".join(rows)
 
 
+def shard_update_section(arch: str = "resnet50") -> str:
+    """ZeRO-1 byte/time accounting (docs/comm.md §Sharded update): per
+    schedule at its autotuned bucket size, the all-reduce timeline
+    (AR(g) + full update) vs the sharded one (RS(g) + update/n + AG(bf16
+    p), gather hideable behind the next forward)."""
+    from repro.comm import available
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    rows = [f"### Sharded-update accounting ({arch}, bf16 wire): "
+            "AR(g)+update vs RS(g)+update/n+AG(p)\n",
+            "| mesh | schedule | bucket MB | AR t_step | shard t_step "
+            "| update | gather | Δ step |",
+            "|---|---|---|---|---|---|---|---|"]
+    for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
+        for s in available():
+            ar = autotune(model.param_pd, schedule=s, axes=axes,
+                          sizes=sizes, family=cfg.family)
+            sh = autotune(model.param_pd, schedule=s, axes=axes,
+                          sizes=sizes, family=cfg.family, shard_update=True)
+            d = 100 * (sh.sim.t_step_s - ar.sim.t_step_s) / ar.sim.t_step_s
+            rows.append(
+                f"| {tag} | {s} | {sh.bucket_mb:g} "
+                f"| {fmt_t(ar.sim.t_step_s)} | {fmt_t(sh.sim.t_step_s)} "
+                f"| {fmt_t(ar.sim.t_update_s)}→{fmt_t(sh.sim.t_update_s)} "
+                f"| {fmt_t(sh.sim.t_gather_s)} | {d:+.1f}% |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun/baseline")
     ap.add_argument("--compare", default=None,
                     help="second records dir: emit baseline-vs-optimized")
     ap.add_argument("--section", default="roofline",
-                    choices=["roofline", "dryrun", "comm", "autotune"])
+                    choices=["roofline", "dryrun", "comm", "autotune",
+                             "shard"])
     args = ap.parse_args()
     if args.section == "comm":
         print(comm_section())
         return
     if args.section == "autotune":
         print(autotune_section())
+        return
+    if args.section == "shard":
+        print(shard_update_section())
         return
     recs = load(args.dir)
     if args.compare:

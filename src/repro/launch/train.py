@@ -49,6 +49,17 @@ def main(argv=None):
     ap.add_argument("--no-overlap", action="store_true",
                     help="post-backward collectives instead of issuing "
                          "each bucket's all-reduce inside the backward")
+    ap.add_argument("--shard-update", action="store_true",
+                    help="ZeRO-1 sharded update: stop at the reduce-"
+                         "scatter, run the packed LARS update on 1/n of "
+                         "the buffers, all-gather the updated params")
+    ap.add_argument("--update-kernel", action="store_true",
+                    help="fused lars_update Pallas kernel for the sharded "
+                         "update (interpret-mode on CPU)")
+    ap.add_argument("--backward-profile", default="model",
+                    choices=["model", "measured"],
+                    help="bucket autotuner backward-time source: FLOPs "
+                         "model, or one profiled warm-up step")
     ap.add_argument("--lr", type=float, default=None,
                     help="default: linear-scaling rule from batch size")
     ap.add_argument("--warmup", type=int, default=None)
@@ -83,20 +94,41 @@ def main(argv=None):
     batch_fn = make_batch_fn(cfg, shape, seed=args.seed, kind=args.data,
                              mesh=mesh)
     from repro.configs.base import CommConfig
+    if args.shard_update and args.comm in ("xla", "naive"):
+        raise SystemExit(
+            f"--shard-update needs an explicit-DP schedule "
+            f"(--comm {{bucketed,psum,ring,hierarchical,2d_torus,dbtree}}), "
+            f"not {args.comm!r} — it would silently train replicated")
+    if args.backward_profile == "measured" and args.bucket_mb != "auto":
+        print("note: --backward-profile measured only affects the bucket "
+              "autotuner; add --bucket-mb auto or the profile is unused",
+              flush=True)
     comm_cfg = CommConfig(strategy=args.comm, bucket_mb=args.bucket_mb,
-                          overlap=not args.no_overlap)
+                          overlap=not args.no_overlap,
+                          shard_update=args.shard_update,
+                          update_kernel=args.update_kernel,
+                          backward_profile=args.backward_profile)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
                                  mesh=mesh, comm=comm_cfg,
-                                 grad_accum=args.grad_accum)
+                                 grad_accum=args.grad_accum,
+                                 profile_batch=(batch_fn(0) if
+                                                args.backward_profile ==
+                                                "measured" else None))
     if getattr(train_step, "tuned", None) is not None:
         t = train_step.tuned
         print(f"autotuned bucket plan: {t.bucket_mb:g}MB x "
-              f"{t.n_buckets} buckets, predicted overlap eff "
-              f"{t.sim.overlap_eff:.2f}", flush=True)
+              f"{t.n_buckets} buckets ({t.sim.mode}), predicted overlap "
+              f"eff {t.sim.overlap_eff:.2f}", flush=True)
+    if getattr(train_step, "shard_update", False):
+        print(f"ZeRO-1 sharded update: {train_step.n_shards} shards over "
+              f"'{train_step.shard_axis}'", flush=True)
     eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
 
-    state = init_state(model, args.seed, mesh,
-                       opt_kind=args.optimizer)
+    sharded = getattr(train_step, "shard_update", False)
+    state = init_state(model, args.seed, mesh, opt_kind=args.optimizer,
+                       sharded_plan=train_step.bucket_plan if sharded
+                       else None,
+                       n_shards=train_step.n_shards if sharded else 1)
     state, history = loop.train(
         state, train_step, batch_fn, steps=args.steps, eval_step=eval_step,
         eval_batch_fn=batch_fn, eval_every=args.eval_every,

@@ -35,8 +35,10 @@ def pd_stack(tree, n: int):
     return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, PD))
 
 
-def dense_pd(d_in: int, d_out: int, *, spec=P(), scale: Optional[float] = None,
-             dtype=jnp.float32) -> PD:
+def dense_pd(d_in: int, d_out: int, *, spec=None,
+             scale: Optional[float] = None, dtype=jnp.float32) -> PD:
+    if spec is None:
+        spec = P()
     if scale is None:
         scale = d_in ** -0.5
     return PD((d_in, d_out), spec=spec, init="normal", scale=scale, dtype=dtype)

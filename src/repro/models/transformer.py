@@ -251,7 +251,8 @@ def _hybrid_forward(params, cfg, mesh, x, positions, *, mode, cache=None,
         if mode == "decode":
             x, ac = _shared_attn_block(
                 params["shared_attn"], x, positions, cfg, decode=True,
-                cache=jax.tree.map(lambda a: a[gi], cache["attn"]), pos=pos)
+                cache=jax.tree.map(lambda a, g=gi: a[g], cache["attn"]),
+                pos=pos)
         else:
             x, ac = _shared_attn_block(
                 params["shared_attn"], x, positions, cfg,

@@ -13,14 +13,38 @@ from repro.core import lars, pinit
 class TrainState(NamedTuple):
     step: jax.Array
     params: Any          # fp32 master
-    mom: Any             # fp32 momentum buffers
+    mom: Any             # fp32 momentum buffers; ZeRO-1: packed shard bufs
     bn_state: Any = None # resnet only
 
 
-def init_state(model, seed: int = 0, mesh=None,
-               opt_kind: str = "lars") -> TrainState:
+def init_packed_momentum(plan, n_shards: int = 1):
+    """ZeRO-1 sharded momentum (CommConfig.shard_update): one flat fp32
+    buffer per bucket, global shape ``(n_shards * bucketing.shard_elems,)``,
+    partitioned over the shard axis by the train step's shard_map specs.
+
+    Layout is DEVICE-major, not bucket-linear: global rows
+    ``[r*c, (r+1)*c)`` persist the momentum of whatever bucket chunk the
+    device at shard-axis index r owns — chunk ``(r+1) % n_shards`` under
+    the ring layout (``comm.primitives.shard_index``) — so the buffer is
+    chunk-rotated relative to the packed param order. Self-consistent
+    across steps; any tooling unpacking it by bucket offset must undo the
+    rotation first."""
+    from repro.core import bucketing
+    return tuple(
+        jnp.zeros((n_shards * bucketing.shard_elems(s, n_shards),),
+                  jnp.float32) for s in plan.bucket_sizes)
+
+
+def init_state(model, seed: int = 0, mesh=None, opt_kind: str = "lars",
+               sharded_plan=None, n_shards: int = 1) -> TrainState:
+    """``sharded_plan`` (a ``BucketPlan``, typically
+    ``train_step.bucket_plan``) switches the momentum leaves to the ZeRO-1
+    packed sharded layout expected by ``CommConfig.shard_update`` steps."""
     params = pinit.materialize(model.param_pd, seed, mesh)
-    mom = lars.init_momentum(params, opt_kind)
+    if sharded_plan is not None:
+        mom = init_packed_momentum(sharded_plan, n_shards)
+    else:
+        mom = lars.init_momentum(params, opt_kind)
     bn = None
     if model.bn_state_pd is not None:
         bn = pinit.materialize(model.bn_state_pd, seed, mesh)

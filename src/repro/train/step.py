@@ -72,7 +72,7 @@ def make_loss_fn(model, *, smoothing: float = 0.1, aux_coef: float = 0.01,
 def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                     smoothing: float = 0.1, mesh=None, comm: str = "xla",
                     bucket_mb: float = 4.0, comm_dtype: str = "bf16",
-                    grad_accum: int = 1):
+                    grad_accum: int = 1, profile_batch=None):
     """Returns train_step(state, batch) -> (state, metrics). Not jitted —
     the caller owns jit/shardings (launcher, dryrun, tests).
 
@@ -84,7 +84,12 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     ``comm`` is either a strategy name ('xla' | 'naive' | any schedule in
     ``repro.comm.registry``) or a full ``configs.base.CommConfig``, which
     then also carries the bucket_mb ('auto' = autotuned) / wire dtype /
-    kernel / overlap knobs."""
+    kernel / overlap / shard_update (ZeRO-1) / backward_profile knobs.
+    With ``CommConfig.shard_update`` the state's momentum must be in the
+    packed sharded layout (``train.state.init_state(...,
+    sharded_plan=train_step.bucket_plan, n_shards=train_step.n_shards)``).
+    ``profile_batch`` (one real batch) enables
+    ``backward_profile='measured'`` for the autotuner."""
     comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
         strategy=comm, bucket_mb=bucket_mb, wire_dtype=comm_dtype)
     comm, bucket_mb, comm_dtype = (comm_cfg.strategy, comm_cfg.bucket_mb,
@@ -136,6 +141,25 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     wire = jnp.bfloat16 if comm_dtype == "bf16" else jnp.float32
     wire_bytes = 2 if comm_dtype == "bf16" else 4
 
+    # ZeRO-1 sharded update (docs/comm.md): shard over the innermost
+    # non-trivial mesh axis — the same rule the scatter schedules
+    # (comm.schedules.shard_axis) and the cost model apply
+    from repro.comm.cost import shard_axis_size
+    shard_update = comm_cfg.shard_update and comm != "naive"
+    shard_axis, n_shards = shard_axis_size(
+        axes, tuple(mesh.shape[a] for a in axes))
+    if shard_update:
+        assert opt_cfg.kind in ("lars", "sgdm") and not opt_cfg.nesterov, \
+            f"shard_update supports lars/sgdm, not {opt_cfg.kind!r}"
+
+    profile = None
+    if (bucket_mb == "auto" and comm != "naive"
+            and comm_cfg.backward_profile == "measured"
+            and profile_batch is not None):
+        profile = _measure_profile(model, profile_batch,
+                                   smoothing=smoothing,
+                                   n_dp=mesh.devices.size)
+
     tuned = None
     if bucket_mb == "auto":
         if comm == "naive":
@@ -145,7 +169,9 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             tuned = autotune(
                 model.param_pd, schedule=comm, axes=axes,
                 sizes=tuple(mesh.shape[a] for a in axes),
-                dtype_bytes=wire_bytes, family=model.cfg.family)
+                dtype_bytes=wire_bytes, family=model.cfg.family,
+                profile=profile, shard_update=shard_update,
+                param_dtype_bytes=wire_bytes)
             bucket_mb = tuned.bucket_mb
     plan = bucketing.make_plan(jax.tree.map(
         lambda pd: pd, model.param_pd), bucket_mb=bucket_mb,
@@ -153,10 +179,34 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
 
     # overlap-aware scheduling (§III-C.2): wrap each bucket group's params
     # in a custom-vjp identity so its collective fires inside the backward
-    # pass, as soon as the group's grads exist. 'naive' has no buckets.
-    overlap = comm_cfg.overlap and comm != "naive"
+    # pass, as soon as the group's grads exist. 'naive' has no buckets; the
+    # sharded path needs the raw (unreduced) grads, so its reduce-scatters
+    # are issued per bucket after the backward instead.
+    overlap = comm_cfg.overlap and comm != "naive" and not shard_update
+
+    def sharded_step(state: TrainState, batch):
+        (_, (metrics, new_bn)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch, state.bn_state)
+        g_shards = ddp.reduce_scatter_grads(
+            grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
+            use_kernel=comm_cfg.use_kernel)
+        if new_bn is not None:
+            new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
+        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        lr = schedule(state.step)
+        p_shards, m_shards = lars.sharded_update(
+            state.params, g_shards, list(state.mom), lr, opt_cfg, plan,
+            shard_axis=shard_axis, n_shards=n_shards,
+            update_kernel=comm_cfg.update_kernel)
+        params = ddp.all_gather_params(p_shards, plan,
+                                       shard_axis=shard_axis,
+                                       wire_dtype=wire)
+        metrics = dict(metrics, lr=lr)
+        return TrainState(state.step + 1, params, m_shards, new_bn), metrics
 
     def local_step(state: TrainState, batch):
+        if shard_update:
+            return sharded_step(state, batch)
         if overlap:
             def wrapped_loss(params, b, bn):
                 p = ddp.wrap_params_for_overlap(
@@ -184,6 +234,10 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         batch_specs = {k: P(axes, *([None] * (v.ndim - 1)))
                        for k, v in batch.items()}
         state_spec = jax.tree.map(lambda _: P(), state)
+        if shard_update:
+            # momentum persists sharded: dim 0 partitioned over shard_axis
+            state_spec = state_spec._replace(
+                mom=jax.tree.map(lambda _: P(shard_axis), state.mom))
         return compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(state_spec, batch_specs),
@@ -196,7 +250,43 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     train_step.bucket_mb = bucket_mb
     train_step.tuned = tuned
     train_step.overlap = overlap
+    train_step.shard_update = shard_update
+    train_step.shard_axis = shard_axis
+    train_step.n_shards = n_shards
+    train_step.backward_profile = profile
     return train_step
+
+
+def _measure_profile(model, batch, *, smoothing: float, n_dp: int = 1):
+    """Profiled warm-up step for ``backward_profile='measured'``: a
+    single-device differentiation of the real loss with probing identities
+    at the bucket-group boundaries (``ddp.wrap_params_for_probe``). The
+    batch is pulled to host and cut to its 1/n_dp per-device share first,
+    so the measured time matches the per-device backward the overlap
+    timeline budgets against. Falls back to the FLOPs model (returns None)
+    if capture fails — e.g. a forward that requires the mesh."""
+    from repro.comm.autotune import measure_backward_profile
+    from repro.core import pinit
+    try:
+        def per_device(x):
+            x = jax.device_get(x)
+            if getattr(x, "ndim", 0) == 0:
+                return x
+            return x[:max(x.shape[0] // max(n_dp, 1), 1)]
+        batch = jax.tree.map(per_device, batch)
+        params = pinit.materialize(model.param_pd, 0, None)
+        bn = (pinit.materialize(model.bn_state_pd, 0, None)
+              if model.bn_state_pd is not None else None)
+        local_loss = make_loss_fn(model, smoothing=smoothing, mesh=None)
+        prof = measure_backward_profile(
+            lambda p: local_loss(p, batch, bn)[0], params)
+        print(f"measured backward profile: {len(prof.cum_elems)} groups, "
+              f"total {prof.total_s * 1e3:.1f}ms", flush=True)
+        return prof
+    except Exception as e:  # noqa: BLE001 — profile is best-effort
+        print(f"backward profile capture failed ({type(e).__name__}: "
+              f"{e}); falling back to the FLOPs model", flush=True)
+        return None
 
 
 def make_eval_step(model, *, smoothing: float = 0.0, mesh=None):

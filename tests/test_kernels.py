@@ -44,6 +44,110 @@ def test_lars_packed_update(n_chunks, n_tensors, lr, mu, wd):
     np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
 
 
+def _ragged_layout_tree():
+    """Real-model-shaped ragged layout: conv / BN scale / dense / head /
+    scalar leaves whose per-tensor CHUNK padding and multi-bucket plan
+    exercise the packed seg maps the way a real resnet plan does."""
+    k = jax.random.PRNGKey(42)
+    return {
+        "conv1": jax.random.normal(k, (3, 3, 3, 24)),
+        "bn": {"scale": jnp.full((24,), 1.5),
+               "bias": 0.1 * jax.random.normal(jax.random.fold_in(k, 1),
+                                               (24,))},
+        "block": {"w1": jax.random.normal(jax.random.fold_in(k, 2),
+                                          (129, 65)),
+                  "w2": jax.random.normal(jax.random.fold_in(k, 3),
+                                          (65, 200))},
+        "head": jax.random.normal(jax.random.fold_in(k, 4), (200, 33)),
+        "scalar": jnp.float32(0.7),
+    }
+
+
+def test_lars_packed_update_kernel_on_real_bucket_layout():
+    """The fused Pallas kernel vs the UNPACKED per-tensor jnp update, on a
+    plan-derived multi-bucket layout (per-tensor CHUNK padding, seg map
+    from the plan) — the layout the ZeRO-1 path actually feeds it."""
+    params = _ragged_layout_tree()
+    k = jax.random.PRNGKey(7)
+    grads = jax.tree.map(
+        lambda x: 0.01 * jax.random.normal(k, x.shape), params)
+    mom = jax.tree.map(lambda x: 0.05 * jnp.ones_like(x), params)
+    plan = bucketing.make_plan(params, bucket_mb=0.05)
+    assert plan.n_buckets >= 2
+    trust_leaves = [0.1 + jnp.abs(jax.random.normal(
+        jax.random.fold_in(k, i), ())) for i in range(plan.n_tensors)]
+    trust = jnp.stack(trust_leaves)            # indexed like plan.slots
+    lr, mu, wd = 0.1, 0.9, 1e-4
+
+    p_buf = bucketing.concat_buckets(bucketing.pack(params, plan,
+                                                    dtype=jnp.float32))
+    g_buf = bucketing.concat_buckets(bucketing.pack(grads, plan,
+                                                    dtype=jnp.float32))
+    m_buf = bucketing.concat_buckets(bucketing.pack(mom, plan,
+                                                    dtype=jnp.float32))
+    seg = jnp.asarray(bucketing.segment_ids(plan))
+    got_p, got_m = ops.lars_packed_update(p_buf, g_buf, m_buf, trust, seg,
+                                          lr=lr, momentum=mu, wd=wd)
+    sizes = list(plan.bucket_sizes)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    got_p_tree = bucketing.unpack(
+        [got_p[offs[b]:offs[b + 1]] for b in range(plan.n_buckets)], plan)
+    got_m_tree = bucketing.unpack(
+        [got_m[offs[b]:offs[b + 1]] for b in range(plan.n_buckets)], plan)
+
+    # unpacked per-tensor reference (slot i describes leaf n-1-i)
+    trust_tree = jax.tree_util.tree_unflatten(
+        plan.treedef, list(reversed(list(trust))))
+
+    def ref_upd(p, g, v, t):
+        g = g + wd * p
+        v2 = mu * v + (lr * t) * g
+        return p - v2, v2
+
+    want = jax.tree.map(ref_upd, params, grads, mom, trust_tree)
+    want_p = jax.tree.map(lambda t: t[0], want,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    want_m = jax.tree.map(lambda t: t[1], want,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, rtol=1e-5, atol=1e-6), got_p_tree, want_p)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, rtol=1e-5, atol=1e-6), got_m_tree, want_m)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_lars_packed_update_kernel_sharded_layout(n_shards):
+    """Kernel on each CHUNK-aligned shard (shard-aware seg maps) ==
+    kernel on the full padded bucket — the ZeRO-1 invariant."""
+    params = _ragged_layout_tree()
+    k = jax.random.PRNGKey(3)
+    grads = jax.tree.map(
+        lambda x: 0.01 * jax.random.normal(k, x.shape), params)
+    plan = bucketing.make_plan(params, bucket_mb=0.05)
+    trust = 0.1 + jnp.abs(jax.random.normal(k, (plan.n_tensors,)))
+    seg_maps = bucketing.shard_segment_ids(plan, n_shards)
+    p_bufs = bucketing.pack(params, plan, dtype=jnp.float32)
+    g_bufs = bucketing.pack(grads, plan, dtype=jnp.float32)
+    for b in range(plan.n_buckets):
+        p = bucketing.pad_to_shards(p_bufs[b], n_shards)
+        g = bucketing.pad_to_shards(g_bufs[b], n_shards)
+        m = jnp.zeros_like(p)
+        c = bucketing.shard_elems(plan.bucket_sizes[b], n_shards)
+        full_p, full_m = ops.lars_packed_update(
+            p, g, m, trust, jnp.asarray(seg_maps[b].reshape(-1)),
+            lr=0.1, momentum=0.9, wd=1e-4)
+        for s in range(n_shards):
+            sh_p, sh_m = ops.lars_packed_update(
+                p[s * c:(s + 1) * c], g[s * c:(s + 1) * c],
+                m[s * c:(s + 1) * c], trust,
+                jnp.asarray(seg_maps[b][s]), lr=0.1, momentum=0.9,
+                wd=1e-4)
+            np.testing.assert_allclose(sh_p, full_p[s * c:(s + 1) * c],
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(sh_m, full_m[s * c:(s + 1) * c],
+                                       rtol=1e-6, atol=1e-7)
+
+
 @pytest.mark.parametrize("T,V", [(8, 512), (64, 1000), (128, 4096),
                                  (256, 2048), (16, 333)])
 @pytest.mark.parametrize("smoothing", [0.0, 0.1])

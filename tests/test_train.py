@@ -33,7 +33,7 @@ def _train(arch, steps, *, opt="lars", lr=2.0, comm="xla", mesh=None,
     bf = make_batch_fn(cfg, InputShape("t", "train", seq, batch), mesh=mesh)
     s = st.init_state(model, 0, opt_kind=opt)
     losses = []
-    for i in range(steps):
+    for _ in range(steps):
         s, m = step(s, bf(s.step))
         losses.append(float(m["loss"]))
     return losses, s
