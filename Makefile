@@ -8,20 +8,24 @@ test:            ## tier-1 verify: the full suite, fail fast
 
 ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 	JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-		$(PY) -m pytest -x -q
+		$(PY) -m pytest -x -q --junitxml=experiments/junit.xml
+	$(PY) -m tools.test_durations experiments/junit.xml \
+		experiments/slowest-tests.txt
 	@test -z "$$(git status --porcelain)" || \
 		{ git status --porcelain; \
 		  echo "FAIL: tree dirty after tests (extend .gitignore)"; exit 1; }
 	@if command -v ruff >/dev/null 2>&1; then \
-		ruff check src tests benchmarks; \
+		ruff check src tests benchmarks tools; \
 	else echo "ruff not installed locally; CI runs it"; fi
 	$(PY) -m benchmarks.run --smoke --json experiments/bench-smoke.json
 	@$(PY) -c "import json; rows = json.load(open('experiments/bench-smoke.json')); \
 		assert any('shard_update_plan' in r['name'] for r in rows), \
-		'sharded smoke row missing from bench artifact'"
+		'sharded smoke row missing from bench artifact'; \
+		assert any('gather_ahead_plan' in r['name'] for r in rows), \
+		'gather-ahead smoke row missing from bench artifact'"
 
 test-tier1:      ## fast in-process subset (no 8-device subprocesses)
-	$(PY) -m pytest -x -q -m tier1
+	$(PY) -m pytest -x -q -m "tier1 and not tier2"
 
 bench:           ## paper-table benchmarks, quick variant
 	$(PY) -m benchmarks.run --quick

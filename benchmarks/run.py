@@ -652,6 +652,41 @@ def bench_shard_update_plan(quick: bool):
              f"{sh.sim.t_gather_s*1e6:.0f}us hidden behind next fwd)")
 
 
+def bench_gather_ahead_plan(quick: bool):
+    """Gather-ahead accounting rows (part of --smoke, asserted in CI): the
+    sharded path's param all-gather at its two issue points — step end
+    (fully exposed) vs gather-ahead (issued from the persistent shards at
+    the start of the next forward, ddp.gather_ahead_params, so it hides
+    under forward compute). Ring schedule, autotuned bucket sizes."""
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("resnet50"))
+    for tag, axes, sizes in [("16x16", ("data",), (16,)),
+                             ("2x16x16", ("pod", "data"), (2, 16))]:
+        t0 = time.perf_counter()
+        ga = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv", shard_update=True)
+        # AG@end priced on the SAME plan, so the delta is purely the
+        # gather issue point
+        end = autotune(model.param_pd, schedule="ring", axes=axes,
+                       sizes=sizes, family="conv", shard_update=True,
+                       gather_ahead=False, candidates=(ga.bucket_mb,))
+        assert end.sim.mode == "shard_update"
+        assert ga.sim.mode == "shard_update+gather_ahead"
+        # hiding the gather can only help, and on these meshes it fully
+        # disappears behind the forward window
+        assert ga.sim.t_step_s <= end.sim.t_step_s, (ga.sim, end.sim)
+        hidden = end.sim.t_exposed_s - ga.sim.t_exposed_s
+        emit(f"comm.gather_ahead_plan_{tag}",
+             (time.perf_counter() - t0) * 1e6,
+             f"ring AG(bf16 p) {ga.sim.t_gather_s*1e6:.0f}us: step-end "
+             f"t_step {end.sim.t_step_s*1e3:.2f}ms -> gather-ahead "
+             f"{ga.sim.t_step_s*1e3:.2f}ms ({hidden*1e6:.0f}us of gather "
+             f"hidden under next fwd) @ {ga.bucket_mb:g}MB")
+
+
 def bench_autotune_plan(quick: bool):
     """Pure cost-model rows (no training): the autotuner's joint
     (schedule x bucket size) pick per production mesh — the plan
@@ -678,14 +713,15 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_kernel_batched_norm, bench_kernel_smoothed_xent,
        bench_kernel_lars_update, bench_comm_bucketing,
        bench_comm_schedules, bench_comm_overlap, bench_comm_shard_update,
-       bench_autotune_plan, bench_shard_update_plan]
+       bench_autotune_plan, bench_shard_update_plan,
+       bench_gather_ahead_plan]
 
 # --smoke: the CI micro-run — pure-math projections only (no subprocess
 # training, no 8-device compiles), finishes in seconds and emits the JSON
 # artifact that tracks the bench trajectory per-PR (including the sharded-
-# update accounting row)
+# update and gather-ahead accounting rows)
 SMOKE = [bench_table1, bench_fig2, bench_autotune_plan,
-         bench_shard_update_plan]
+         bench_shard_update_plan, bench_gather_ahead_plan]
 
 
 def main() -> None:

@@ -37,8 +37,12 @@ Two extensions (docs/comm.md):
   any candidate plan's group boundaries interpolate into.
 * ``shard_update=True`` prices the ZeRO-1 timeline instead of the
   all-reduce one: per-bucket reduce-scatter (overlapped with the backward),
-  the 1/n packed update, and the param all-gather (hideable behind the
-  next forward) — RS(g) + AG(p) + update/n vs AR(g) + full update.
+  the 1/n packed update on the persistent shards, and the param
+  all-gather — RS(g) + AG(p) + update/n vs AR(g) + full update.
+  ``gather_ahead`` (default) hides the AG under the NEXT step's forward
+  (``ddp.gather_ahead_params``, the implemented timeline);
+  ``gather_ahead=False`` charges the full AG to the step (the end-of-step
+  issue point).
 """
 from __future__ import annotations
 
@@ -81,7 +85,8 @@ class OverlapSim:
     overlap_eff: float           # fraction of comm hidden: 1 - exposed/comm
     t_update_s: float = 0.0      # optimizer step (1/n of it when sharded)
     t_gather_s: float = 0.0      # param all-gather (sharded mode only)
-    mode: str = "allreduce"      # 'allreduce' | 'shard_update'
+    mode: str = "allreduce"      # 'allreduce' | 'shard_update' (AG at step
+                                 # end) | 'shard_update+gather_ahead'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,16 +195,19 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
              links: Optional[Dict[str, cost.Link]] = None,
              profile: Optional[BackwardProfile] = None,
              shard_update: bool = False, param_dtype_bytes: int = 2,
+             gather_ahead: bool = True,
              t_forward_s: Optional[float] = None) -> OverlapSim:
     """Walk the §III-C.2 timeline: groups finish their backward in packing
     order; each bucket's collective starts at max(grads ready, link free).
 
     ``shard_update=True`` prices the ZeRO-1 timeline instead: the per-bucket
-    collective is the reduce-scatter-terminal form, the optimizer step runs
-    on 1/n_shards of the buffers, and the param all-gather
-    (``param_dtype_bytes`` per element — bf16 by default) is hideable
-    behind the next forward pass (``t_forward_s``, default backward/2), so
-    only its overhang is charged to the step."""
+    collective is the reduce-scatter-terminal form (issued inside the
+    backward), the optimizer step runs on 1/n_shards of the persistent
+    shards, and the param all-gather (``param_dtype_bytes`` per element —
+    bf16 by default) is priced per ``gather_ahead``: True (default) issues
+    it at the start of the next step's forward, so it hides up to
+    ``t_forward_s`` (default backward/2) and only the overhang is charged;
+    False issues it at step end, fully exposed."""
     bt = backward_times(plan, t_backward_s, profile)
     ready = np.cumsum(bt)
     free = 0.0
@@ -223,10 +231,15 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
             cost.predict_all_gather(axes, sizes, s * param_dtype_bytes,
                                     links=links).time_s
             for s in plan.bucket_sizes)
-        t_fwd = (0.5 * t_backward_s if t_forward_s is None else t_forward_s)
-        exposed += max(0.0, t_gather - t_fwd)
+        if gather_ahead:
+            t_fwd = (0.5 * t_backward_s if t_forward_s is None
+                     else t_forward_s)
+            exposed += max(0.0, t_gather - t_fwd)
+            mode = "shard_update+gather_ahead"
+        else:
+            exposed += t_gather
+            mode = "shard_update"
         t_comm += t_gather
-        mode = "shard_update"
     eff = min(1.0, max(0.0, 1.0 - exposed / t_comm)) if t_comm > 0 else 1.0
     return OverlapSim(t_backward_s=t_backward_s, t_comm_s=t_comm,
                       t_exposed_s=exposed,
@@ -242,13 +255,14 @@ def autotune(tree, *, schedule: str, axes: Sequence[str],
              candidates: Sequence[float] = CANDIDATES_MB,
              links: Optional[Dict[str, cost.Link]] = None,
              profile: Optional[BackwardProfile] = None,
-             shard_update: bool = False,
+             shard_update: bool = False, gather_ahead: bool = True,
              param_dtype_bytes: int = 2) -> TunedPlan:
     """Best bucket size for one schedule on one mesh. ``tree`` is the
     parameter (descriptor) pytree the plans are built from; ``family``
     (configs ModelConfig.family) refines the backward-time default when no
     measured ``t_backward_s``/``profile`` is given; ``shard_update`` prices
-    the ZeRO-1 RS(g)+update/n+AG(p) timeline instead of AR(g)+update."""
+    the ZeRO-1 RS(g)+update/n+AG(p) timeline instead of AR(g)+update,
+    with the AG hidden behind the next forward when ``gather_ahead``."""
     if t_backward_s is None:
         if profile is not None:
             t_backward_s = profile.total_s
@@ -264,6 +278,7 @@ def autotune(tree, *, schedule: str, axes: Sequence[str],
         sim = simulate(plan, schedule, axes, sizes, dtype_bytes=dtype_bytes,
                        t_backward_s=t_backward_s, links=links,
                        profile=profile, shard_update=shard_update,
+                       gather_ahead=gather_ahead,
                        param_dtype_bytes=param_dtype_bytes)
         key = (sim.t_step_s, plan.n_buckets)
         if best is None or key < best[0]:
@@ -279,7 +294,7 @@ def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
               family: Optional[str] = None,
               links: Optional[Dict[str, cost.Link]] = None,
               profile: Optional[BackwardProfile] = None,
-              shard_update: bool = False,
+              shard_update: bool = False, gather_ahead: bool = True,
               param_dtype_bytes: int = 2) -> TunedPlan:
     """Joint (schedule x bucket size) search over every registered schedule
     that has a cost model — what the dry-run comm table reports."""
@@ -293,6 +308,7 @@ def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
                          dtype_bytes=dtype_bytes, t_backward_s=t_backward_s,
                          family=family, links=links, profile=profile,
                          shard_update=shard_update,
+                         gather_ahead=gather_ahead,
                          param_dtype_bytes=param_dtype_bytes)
         except KeyError:          # registered but uncosted schedule
             continue

@@ -95,12 +95,14 @@ def predict(schedule: str, axes: Sequence[str], sizes: Sequence[int],
                 ph.append(Phase(f"tree-bcast[{a}]", depth,
                                 depth * B / 2, links[a]))
     elif schedule in ("hierarchical", "2d_torus"):
-        intra, n = axes[-1], sizes[-1]
+        # scatter axis: innermost non-trivial (schedules.shard_axis) — a
+        # trailing size-1 axis must not collapse the hierarchy
+        intra, n = shard_axis_size(axes, sizes)
         shard = B / max(n, 1)
         if n > 1:
             ph.append(Phase(f"ring-rs[{intra}]", n - 1,
                             B * (n - 1) / n, links[intra]))
-        outer = list(zip(axes[:-1], sizes[:-1]))
+        outer = [(a, s) for a, s in zip(axes, sizes) if a != intra]
         if schedule == "hierarchical":
             p = 1
             for _, s in outer:
@@ -191,7 +193,10 @@ def predict_all_gather(axes: Sequence[str], sizes: Sequence[int],
     bf16 params) along the shard axis — the gather phase every sharded
     update pays, regardless of which schedule ran the scatter. Shards are
     already identical across the other axes, so only the shard-axis ring
-    moves bytes."""
+    moves bytes. Where this lands on the step timeline is the gather_ahead
+    knob: issued at the start of the next forward
+    (``ddp.gather_ahead_params``) it hides behind forward compute, issued
+    at step end it is fully exposed — ``autotune.simulate`` prices both."""
     links = links or default_links(axes)
     intra, n = shard_axis_size(axes, sizes)
     ph = []

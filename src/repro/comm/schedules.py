@@ -15,13 +15,15 @@ Registered schedules:
   ring         — sequential bandwidth-optimal ring per axis (reduce-scatter
                  + all-gather via ``ppermute``), innermost axis first.
   hierarchical — Akiba-style (arXiv:1711.04325): ring reduce-scatter within
-                 ``axes[-1]``, one fused psum across the outer (cross-pod)
-                 axes on the 1/n shard, ring all-gather back. Cross-pod
-                 traffic shrinks by the intra-axis size.
-  2d_torus     — Sony-style (arXiv:1811.05233): ring reduce-scatter on
-                 ``axes[-1]``, ring all-reduce of the shard along each
-                 orthogonal axis, ring all-gather back. Same wire bytes as
-                 hierarchical but every phase is explicit ppermute rings.
+                 the innermost non-trivial axis (``shard_axis``), one fused
+                 psum across the remaining (cross-pod) axes on the 1/n
+                 shard, ring all-gather back. Cross-pod traffic shrinks by
+                 the intra-axis size.
+  2d_torus     — Sony-style (arXiv:1811.05233): ring reduce-scatter on the
+                 innermost non-trivial axis, ring all-reduce of the shard
+                 along each orthogonal axis, ring all-gather back. Same
+                 wire bytes as hierarchical but every phase is explicit
+                 ppermute rings.
   dbtree       — double binary tree (NCCL lineage): two mirrored binomial
                  trees each reduce+broadcast half the buffer, per axis.
                  Logarithmic latency — wins for small (latency-bound)
@@ -83,7 +85,14 @@ def ring_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
 @register("hierarchical")
 def hierarchical_schedule(buf, axes, *, use_kernel: bool = False,
                           interpret=None):
-    intra, inter = axes[-1], tuple(axes[:-1])
+    """Scatter axis = the innermost NON-TRIVIAL axis (``shard_axis``, not
+    blindly ``axes[-1]``): a trailing size-1 axis — the local
+    ``(data, model=1)`` mesh — must not silently collapse the hierarchy
+    into a fused psum. This also keeps the summation order identical to
+    the reduce-scatter-terminal form on every mesh, which the ZeRO-1
+    equivalence matrix relies on."""
+    intra = shard_axis(axes)
+    inter = tuple(a for a in axes if a != intra)
     step_fn, pad_to = _step_fn(use_kernel, interpret)
     shard, n = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
                                         pad_to=pad_to)
@@ -106,7 +115,9 @@ def dbtree_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
 
 @register("2d_torus")
 def torus_schedule(buf, axes, *, use_kernel: bool = False, interpret=None):
-    intra, ortho = axes[-1], tuple(axes[:-1])
+    # scatter axis: innermost non-trivial, like hierarchical above
+    intra = shard_axis(axes)
+    ortho = tuple(a for a in axes if a != intra)
     step_fn, pad_to = _step_fn(use_kernel, interpret)
     shard, n = prim.ring_reduce_scatter(buf, intra, step_fn=step_fn,
                                         pad_to=pad_to)

@@ -27,20 +27,30 @@ class CommConfig:
 
     ``overlap=True`` (default) issues each bucket's collective from inside
     the backward pass, as soon as its layer group's gradients are complete
-    (§III-C.2); ``False`` reproduces the post-backward PR-2 path. Ignored
-    by 'xla' and 'naive'.
+    (§III-C.2); ``False`` reproduces the post-backward PR-2 path. With
+    ``shard_update`` the in-backward collective is the reduce-scatter-
+    terminal form (gradient sinks, ``ddp.wrap_params_for_overlap(
+    shard_sinks=...)``) — no full reduced gradient ever materializes.
+    Ignored by 'xla' and 'naive'.
 
     ``shard_update=True`` (ZeRO-1; docs/comm.md §Sharded update) stops the
     gradient collective at the reduce-scatter: each device runs the packed
     LARS/SGD-M update on its contiguous 1/n shard of the bucket buffers
-    (momentum stored sharded), then all-gathers the updated params —
-    RS(g)+AG(p) on the wire instead of AR(g), optimizer FLOPs and fp32
-    momentum memory cut by the shard count. Explicit-DP schedules only
-    (ignored by 'xla'/'naive'); ``update_kernel=True`` routes the shard
-    update through the fused ``kernels/lars_update`` Pallas kernel.
-    Caveat: with the default bf16 wire the gathered *masters* round-trip
-    through bf16 every step — use ``wire_dtype='f32'`` for long runs
-    until master shards persist across steps (see docs/comm.md).
+    (momentum AND fp32 master shards persist in the train state across
+    steps — ``TrainState.shards``), then all-gathers the bf16 params for
+    the next forward — RS(g)+AG(p) on the wire instead of AR(g), optimizer
+    FLOPs and fp32 optimizer-state memory cut by the shard count. The
+    masters never round-trip through the wire dtype: only the gathered
+    forward copy is quantized. Explicit-DP schedules only (ignored by
+    'xla'/'naive'); ``update_kernel=True`` routes the shard update through
+    the fused ``kernels/lars_update`` Pallas kernel.
+
+    ``gather_ahead=True`` (default; shard_update only) issues the per-
+    bucket param all-gather at the START of the next step's forward, from
+    the persistent shards, so every gather hides under forward compute
+    (``TrainState.params`` then lags the master shards by one update — it
+    is the copy the forward ran on). ``False`` gathers at step end (the
+    PR-4 timeline: fresh ``params``, gather fully exposed).
 
     ``backward_profile`` selects how the autotuner apportions backward
     time over bucket groups when ``bucket_mb='auto'``: 'model' (the
@@ -54,6 +64,7 @@ class CommConfig:
     overlap: bool = True         # issue bucket collectives inside backward
     shard_update: bool = False   # ZeRO-1: RS(g) + sharded update + AG(p)
     update_kernel: bool = False  # fused lars_update Pallas kernel on shards
+    gather_ahead: bool = True    # AG(p) at next step's forward, not step end
     backward_profile: str = "model"   # 'model' | 'measured' (autotune)
 
     def __post_init__(self):

@@ -188,6 +188,37 @@ def pad_to_shards(buf: jax.Array, n_shards: int) -> jax.Array:
     return buf
 
 
+def shard_sizes(plan: BucketPlan, n_shards: int) -> Tuple[int, ...]:
+    """Per-bucket shard length c (``shard_elems``) — the static layout
+    metadata the persistent-shard train state and the gradient sinks of the
+    in-backward reduce-scatter share."""
+    return tuple(shard_elems(s, n_shards) for s in plan.bucket_sizes)
+
+
+def rotate_to_shards(buf: jax.Array, n_shards: int) -> jax.Array:
+    """Packed bucket buffer -> the DEVICE-major persistent-shard layout:
+    zero-pad to ``n_shards * c``, view as ``(n, c)`` chunk rows, and rotate
+    so global row r holds chunk ``(r + 1) % n`` — the chunk the device at
+    shard-axis index r owns under the ring reduce-scatter layout
+    (``comm.primitives.shard_index``). Partitioning the result over the
+    shard axis therefore hands every device exactly its own chunk."""
+    buf = pad_to_shards(buf, n_shards)
+    if n_shards == 1:
+        return buf
+    c = buf.shape[0] // n_shards
+    return jnp.roll(buf.reshape(n_shards, c), -1, axis=0).reshape(-1)
+
+
+def unrotate_shards(buf: jax.Array, n_shards: int) -> jax.Array:
+    """Inverse of ``rotate_to_shards``: device-major rows -> the packed
+    bucket-linear order (still padded to ``n_shards * c``; callers slice
+    to the bucket size)."""
+    if n_shards == 1:
+        return buf
+    c = buf.shape[0] // n_shards
+    return jnp.roll(buf.reshape(n_shards, c), 1, axis=0).reshape(-1)
+
+
 def shard_segment_ids(plan: BucketPlan, n_shards: int) -> List[np.ndarray]:
     """Per-bucket shard-aware segment maps: one ``(n_shards,
     chunks_per_shard)`` int32 array per bucket whose row k holds the

@@ -88,11 +88,14 @@ def _overlap_bucket_fn(slots, schedule, axes, comm_dtype, use_kernel,
     return bucket_identity
 
 
-def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn):
+def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn,
+                       extras=None):
     """Route each bucket group's param leaves through the identity built by
     ``make_group_fn(group_index, group_slots)`` — the shared scaffolding of
     the overlap and probe wraps, including the subtle slot-to-leaf mapping
-    (slot i describes leaf n-1-i: the plan walks reverse flatten order)."""
+    (slot i describes leaf n-1-i: the plan walks reverse flatten order).
+    ``extras[gi]`` (e.g. a gradient sink) is passed as a second argument to
+    group gi's identity when given."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
     n_leaves = len(leaves)
     assert n_leaves == plan.n_tensors
@@ -102,20 +105,62 @@ def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn):
     for gi, group in enumerate(plan.groups):
         idxs = [leaf_idx[id(s)] for s in group]
         fn = make_group_fn(gi, group)
-        outs = fn(tuple(leaves[j] for j in idxs))
+        args = (tuple(leaves[j] for j in idxs),)
+        if extras is not None:
+            args += (extras[gi],)
+        outs = fn(*args)
         for j, o in zip(idxs, outs):
             new_leaves[j] = o
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def _shard_bucket_fn(slots, rs, axes, comm_dtype, use_kernel, interpret):
+    """custom_vjp identity over one bucket group's ``(leaves, sink)`` whose
+    backward rule packs the group's cotangents, runs the schedule's
+    REDUCE-SCATTER-terminal form, and emits the reduced-mean fp32 local
+    shard as the cotangent of the zero-valued ``sink`` (the flax
+    ``perturb`` idiom: side outputs of the backward ride on auxiliary
+    inputs). The leaves' own cotangents are zeros — the sharded path never
+    materializes a full reduced gradient."""
+    @jax.custom_vjp
+    def bucket_identity(leaves, sink):
+        del sink
+        return leaves
+
+    def fwd(leaves, sink):
+        del sink
+        return leaves, None
+
+    def bwd(_, gs):
+        buf = bucketing.pack_group(gs, slots, dtype=comm_dtype)
+        shard = rs(buf, axes, use_kernel=use_kernel, interpret=interpret)
+        n = axes_size(axes)
+        shard = grads_to_master(shard) / n
+        zeros = tuple(jnp.zeros(g.shape, g.dtype) for g in gs)
+        return (zeros, shard)
+
+    bucket_identity.defvjp(fwd, bwd)
+    return bucket_identity
+
+
+def make_shard_sinks(plan: "bucketing.BucketPlan", n_shards: int):
+    """Zero-valued gradient sinks for the in-backward reduce-scatter: one
+    fp32 ``(bucketing.shard_elems,)`` buffer per bucket. Differentiating a
+    ``wrap_params_for_overlap(..., shard_sinks=sinks)``-wrapped loss with
+    respect to these yields the per-bucket reduced-mean fp32 local
+    gradient shards."""
+    return tuple(jnp.zeros((c,), jnp.float32)
+                 for c in bucketing.shard_sizes(plan, n_shards))
+
+
 def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
                             strategy: str, axes: Sequence[str],
                             comm_dtype=jnp.bfloat16, use_kernel: bool = False,
-                            interpret: bool = None):
+                            interpret: bool = None, shard_sinks=None):
     """Overlap-aware bucket scheduling (paper §III-C.2).
 
     Rebuilds ``params`` with each bucket group's leaves routed through an
-    identity whose VJP performs that bucket's all-reduce. Differentiating a
+    identity whose VJP performs that bucket's collective. Differentiating a
     loss of the wrapped params then yields *already reduced-mean* fp32
     gradients, and — unlike ``allreduce_grads``, which runs after the full
     backward pass — each bucket's collective is issued the moment its
@@ -124,8 +169,24 @@ def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
     latency-hiding scheduler is then free to overlap collective and compute;
     on CPU the graphs are equivalent, on TPU the comm hides.
 
+    ``shard_sinks`` (from ``make_shard_sinks``) switches each group's
+    collective to the schedule's reduce-scatter-terminal form (the ZeRO-1
+    in-backward scatter): the backward hands back only this device's
+    reduced-mean fp32 shard, delivered as the cotangent of the matching
+    sink — differentiate the wrapped loss w.r.t. the sinks to collect the
+    per-bucket gradient shards. No full reduced gradient ever exists.
+
     Must be called on the primal params *inside* the differentiated
     function, itself inside ``shard_map`` over ``axes``."""
+    if shard_sinks is not None:
+        from repro.comm import get_reduce_scatter
+        rs = get_reduce_scatter(strategy)
+        return _wrap_param_groups(
+            params, plan,
+            lambda gi, group: _shard_bucket_fn(group, rs, tuple(axes),
+                                               comm_dtype, use_kernel,
+                                               interpret),
+            extras=shard_sinks)
     from repro.comm import get_schedule
     schedule = get_schedule(strategy)
     return _wrap_param_groups(
@@ -142,11 +203,14 @@ def reduce_scatter_grads(grads, *, strategy: str, axes: Sequence[str],
                          plan: "bucketing.BucketPlan",
                          comm_dtype=jnp.bfloat16, use_kernel: bool = False,
                          interpret: bool = None):
-    """Scatter phase: pack gradients into the bucket plan and stop each
-    bucket's collective at the reduce-scatter. Returns one fp32
-    reduced-MEAN shard per bucket — this device's contiguous CHUNK-aligned
-    1/n slice (``comm.primitives.shard_index`` layout), already reduced
-    over every non-shard axis. Must be called inside shard_map."""
+    """POST-backward scatter (the ``CommConfig.overlap=False`` sharded
+    path; with overlap on, ``wrap_params_for_overlap(shard_sinks=...)``
+    issues the same reduce-scatters from inside the backward instead):
+    pack gradients into the bucket plan and stop each bucket's collective
+    at the reduce-scatter. Returns one fp32 reduced-MEAN shard per bucket
+    — this device's contiguous CHUNK-aligned 1/n slice
+    (``comm.primitives.shard_index`` layout), already reduced over every
+    non-shard axis. Must be called inside shard_map."""
     from repro.comm import get_reduce_scatter
     rs = get_reduce_scatter(strategy)
     n = axes_size(axes)
@@ -157,8 +221,8 @@ def reduce_scatter_grads(grads, *, strategy: str, axes: Sequence[str],
 
 def all_gather_params(param_shards, plan: "bucketing.BucketPlan", *,
                       shard_axis: str, wire_dtype=jnp.bfloat16):
-    """Gather phase: cast each updated fp32 master shard to the wire dtype
-    once (bf16 by default — half the bytes of the fp32 grad all-gather the
+    """Gather phase: cast each fp32 master shard to the wire dtype once
+    (bf16 by default — half the bytes of the fp32 grad all-gather the
     replicated path pays), ring all-gather along the shard axis, and unpack
     into the full param pytree. One independent collective per bucket, so
     a latency-hiding scheduler can slide each gather under surrounding
@@ -170,6 +234,25 @@ def all_gather_params(param_shards, plan: "bucketing.BucketPlan", *,
         bufs.append(prim.ring_all_gather(wire, shard_axis,
                                          plan.bucket_sizes[b]))
     return bucketing.unpack(bufs, plan, dtype=jnp.float32)
+
+
+def gather_ahead_params(shards, plan: "bucketing.BucketPlan", *,
+                        shard_axis: str, wire_dtype=jnp.bfloat16):
+    """Gather-AHEAD: rebuild this step's forward params from the persistent
+    master shards (``train.state.TrainState.shards``, updated by the
+    previous step) at the START of the step. Each bucket's all-gather is an
+    independent collective whose consumers are that bucket group's layers,
+    so XLA's latency-hiding scheduler slides every gather under the forward
+    compute of earlier layers — the AG leaves the step's critical path
+    entirely (the timeline ``comm.autotune.simulate(shard_update=True,
+    gather_ahead=True)`` prices). The fp32 masters never round-trip through
+    the wire dtype: only this forward copy is quantized.
+
+    Same collective schedule as ``all_gather_params`` — only the issue
+    point (step start, from the persistent shards) differs. Must be called
+    inside shard_map with the shards' local view."""
+    return all_gather_params(shards, plan, shard_axis=shard_axis,
+                             wire_dtype=wire_dtype)
 
 
 # --------------------------------------------------------------------------

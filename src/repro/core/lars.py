@@ -13,12 +13,13 @@ Per-tensor norms are computed either the plain-jnp way or via the
 ``batched_norm`` Pallas kernel (paper §III-B.2) over the bucket-packed
 buffer — selected with ``use_kernel``.
 
-``sharded_update`` is the ZeRO-1 path (docs/comm.md §Sharded update): trust
-ratios come from psum'd per-tensor *partial* norms over each device's
-bucket shard, and the packed update runs on the local 1/n shard only —
-through the fused ``kernels/lars_update`` Pallas kernel or its packed-jnp
-oracle — so optimizer FLOPs and fp32 momentum memory shrink by the shard
-count.
+``sharded_update_from_shards`` is the ZeRO-1 path (docs/comm.md §Sharded
+update): trust ratios come from psum'd per-tensor *partial* norms over
+each device's bucket shard, and the packed update runs on the local 1/n
+persistent master shard only (``TrainState.shards``) — through the fused
+``kernels/lars_update`` Pallas kernel or its packed-jnp oracle — so
+optimizer FLOPs, fp32 optimizer-state memory, and every update stream
+shrink by the shard count.
 """
 from __future__ import annotations
 
@@ -169,19 +170,22 @@ def shard_trust_ratios(param_shards, grad_shards, segs, plan, cfg: OptConfig,
     return jnp.where(scaled & (wn > 0), raw, 1.0)
 
 
-def sharded_update(params, grad_shards, mom_shards, lr, cfg: OptConfig,
-                   plan, *, shard_axis, n_shards: int,
-                   update_kernel: bool = False, interpret: bool = None):
-    """One ZeRO-1 optimizer step on this device's bucket shards (must run
-    inside shard_map).
+def sharded_update_from_shards(p_shards, grad_shards, mom_shards, lr,
+                               cfg: OptConfig, plan, *, shard_axis,
+                               n_shards: int, update_kernel: bool = False,
+                               interpret: bool = None):
+    """One ZeRO-1 optimizer step on this device's PERSISTENT bucket shards
+    (must run inside shard_map).
 
-    ``grad_shards``/``mom_shards``: per-bucket local fp32 buffers of
-    ``bucketing.shard_elems`` length (the reduce-scatter-terminal schedule
-    output / the sharded momentum leaves). The fp32 masters are packed and
-    the local shard sliced under the ring layout
-    (``comm.primitives.shard_index``); the packed update then touches only
-    1/n of every buffer. Returns ``(param_shards, mom_shards)`` — the
-    caller all-gathers the param shards back (``ddp.all_gather_params``)."""
+    ``p_shards``/``grad_shards``/``mom_shards``: per-bucket local fp32
+    buffers of ``bucketing.shard_elems`` length — the persistent master
+    shards carried in ``TrainState.shards``, the reduce-scatter output,
+    and the sharded momentum leaves. Every stream here is O(N/n): unlike
+    the transitional PR-4 path, no repack of the full masters happens, so
+    the reference implementation now matches what
+    ``comm.cost.lars_update_time_s`` prices. Returns ``(param_shards,
+    mom_shards)`` — the caller persists both and all-gathers the params
+    when the next forward needs them (``ddp.gather_ahead_params``)."""
     from repro.comm.primitives import shard_index
     from repro.core import bucketing
     assert cfg.kind in ("lars", "sgdm"), \
@@ -189,13 +193,7 @@ def sharded_update(params, grad_shards, mom_shards, lr, cfg: OptConfig,
     assert not cfg.nesterov, "nesterov momentum unsupported on shards"
     k = shard_index(shard_axis)
     seg_maps = bucketing.shard_segment_ids(plan, n_shards)
-    p_bufs = bucketing.pack(params, plan, dtype=jnp.float32)
-    p_shards, segs = [], []
-    for b, buf in enumerate(p_bufs):
-        c = bucketing.shard_elems(plan.bucket_sizes[b], n_shards)
-        padded = bucketing.pad_to_shards(buf, n_shards)
-        p_shards.append(jax.lax.dynamic_slice_in_dim(padded, k * c, c))
-        segs.append(jnp.take(jnp.asarray(seg_maps[b]), k, axis=0))
+    segs = [jnp.take(jnp.asarray(m), k, axis=0) for m in seg_maps]
     trust = shard_trust_ratios(p_shards, grad_shards, segs, plan, cfg,
                                shard_axis=shard_axis)
     if update_kernel:

@@ -183,8 +183,9 @@ def autotune_section(arch: str = "resnet50") -> str:
 def shard_update_section(arch: str = "resnet50") -> str:
     """ZeRO-1 byte/time accounting (docs/comm.md §Sharded update): per
     schedule at its autotuned bucket size, the all-reduce timeline
-    (AR(g) + full update) vs the sharded one (RS(g) + update/n + AG(bf16
-    p), gather hideable behind the next forward)."""
+    (AR(g) + full update) vs the sharded one (in-backward RS(g) +
+    update/n + AG(bf16 p)) at both gather issue points — step-end vs
+    gather-ahead (AG hidden under the next step's forward)."""
     from repro.comm import available
     from repro.comm.autotune import autotune
     from repro.configs import get_config
@@ -193,20 +194,29 @@ def shard_update_section(arch: str = "resnet50") -> str:
     cfg = get_config(arch)
     model = build_model(cfg)
     rows = [f"### Sharded-update accounting ({arch}, bf16 wire): "
-            "AR(g)+update vs RS(g)+update/n+AG(p)\n",
+            "AR(g)+update vs RS(g)+update/n+AG(p), AG at step end vs "
+            "gather-ahead\n",
             "| mesh | schedule | bucket MB | AR t_step | shard t_step "
-            "| update | gather | Δ step |",
-            "|---|---|---|---|---|---|---|---|"]
+            "(AG@end) | shard t_step (gather-ahead) | update | gather "
+            "| Δ step |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
         for s in available():
             ar = autotune(model.param_pd, schedule=s, axes=axes,
                           sizes=sizes, family=cfg.family)
             sh = autotune(model.param_pd, schedule=s, axes=axes,
                           sizes=sizes, family=cfg.family, shard_update=True)
+            # AG@end priced on the SAME plan as the gather-ahead row, so
+            # the t_step delta is purely the gather issue point
+            end = autotune(model.param_pd, schedule=s, axes=axes,
+                           sizes=sizes, family=cfg.family,
+                           shard_update=True, gather_ahead=False,
+                           candidates=(sh.bucket_mb,))
             d = 100 * (sh.sim.t_step_s - ar.sim.t_step_s) / ar.sim.t_step_s
             rows.append(
                 f"| {tag} | {s} | {sh.bucket_mb:g} "
-                f"| {fmt_t(ar.sim.t_step_s)} | {fmt_t(sh.sim.t_step_s)} "
+                f"| {fmt_t(ar.sim.t_step_s)} | {fmt_t(end.sim.t_step_s)} "
+                f"| {fmt_t(sh.sim.t_step_s)} "
                 f"| {fmt_t(ar.sim.t_update_s)}→{fmt_t(sh.sim.t_update_s)} "
                 f"| {fmt_t(sh.sim.t_gather_s)} | {d:+.1f}% |")
     return "\n".join(rows)

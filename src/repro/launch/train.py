@@ -56,6 +56,10 @@ def main(argv=None):
     ap.add_argument("--update-kernel", action="store_true",
                     help="fused lars_update Pallas kernel for the sharded "
                          "update (interpret-mode on CPU)")
+    ap.add_argument("--no-gather-ahead", action="store_true",
+                    help="issue the sharded path's param all-gather at "
+                         "step end instead of hiding it under the next "
+                         "step's forward (gather-ahead, the default)")
     ap.add_argument("--backward-profile", default="model",
                     choices=["model", "measured"],
                     help="bucket autotuner backward-time source: FLOPs "
@@ -107,6 +111,7 @@ def main(argv=None):
                           overlap=not args.no_overlap,
                           shard_update=args.shard_update,
                           update_kernel=args.update_kernel,
+                          gather_ahead=not args.no_gather_ahead,
                           backward_profile=args.backward_profile)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
                                  mesh=mesh, comm=comm_cfg,
@@ -120,8 +125,12 @@ def main(argv=None):
               f"{t.n_buckets} buckets ({t.sim.mode}), predicted overlap "
               f"eff {t.sim.overlap_eff:.2f}", flush=True)
     if getattr(train_step, "shard_update", False):
+        rs_at = "in-backward" if train_step.overlap else "post-backward"
+        ag_at = ("gather-ahead (hidden under next forward)"
+                 if train_step.gather_ahead else "step-end")
         print(f"ZeRO-1 sharded update: {train_step.n_shards} shards over "
-              f"'{train_step.shard_axis}'", flush=True)
+              f"'{train_step.shard_axis}', {rs_at} reduce-scatter, "
+              f"{ag_at} param all-gather", flush=True)
     eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
 
     sharded = getattr(train_step, "shard_update", False)

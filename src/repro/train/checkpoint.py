@@ -37,8 +37,14 @@ def save(state: TrainState, ckpt_dir: str, *, tag: str = "last") -> str:
     if state.bn_state is not None:
         payload.update({f"bn{_SEP}{k}": v
                         for k, v in _flatten(state.bn_state).items()})
+    if state.shards is not None:
+        # ZeRO-1 persistent master shards (the authoritative fp32 masters
+        # of a shard_update run — state.params may lag them by one update)
+        payload.update({f"shards{_SEP}{k}": v
+                        for k, v in _flatten(tuple(state.shards)).items()})
     np.savez(path, **payload)
-    meta = {"step": int(state.step), "tag": tag}
+    meta = {"step": int(state.step), "tag": tag,
+            "sharded": state.shards is not None}
     with open(os.path.join(ckpt_dir, f"meta_{tag}.json"), "w") as f:
         json.dump(meta, f)
     return path
@@ -66,9 +72,20 @@ def load(template: TrainState, ckpt_dir: str, *, tag: str = "last"
             new_leaves.append(jax.numpy.asarray(out[key], leaf.dtype))
         return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
+    if template.shards is not None:
+        assert meta.get("sharded"), (
+            "template expects ZeRO-1 master shards but the checkpoint was "
+            "saved from a non-sharded state")
+    else:
+        assert not meta.get("sharded"), (
+            "checkpoint holds ZeRO-1 master shards (and its params copy "
+            "may lag them by one update) but the template is non-sharded "
+            "— rebuild with init_state(..., sharded_plan=..., n_shards=...)")
     params = restore("params", template.params)
     mom = restore("mom", template.mom)
     bn = (restore("bn", template.bn_state)
           if template.bn_state is not None else None)
+    shards = (tuple(restore("shards", tuple(template.shards)))
+              if template.shards is not None else None)
     return TrainState(jax.numpy.asarray(meta["step"], jax.numpy.int32),
-                      params, mom, bn)
+                      params, mom, bn, shards)

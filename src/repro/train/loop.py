@@ -18,6 +18,20 @@ def mlperf_log(tag: str, value=None):
           flush=True)
 
 
+def authoritative_params(state: TrainState, train_step: Callable):
+    """The params evals must read. A ZeRO-1 ``shard_update`` state carries
+    its fp32 masters in ``state.shards``; with gather-ahead (the default)
+    ``state.params`` is the forward copy, one update BEHIND the masters —
+    so reconstruct the full params from the shards instead of silently
+    evaluating a stale step."""
+    if (state.shards is not None
+            and getattr(train_step, "shard_update", False)):
+        from repro.train.state import full_params_from_shards
+        return full_params_from_shards(state.shards, train_step.bucket_plan,
+                                       train_step.n_shards)
+    return state.params
+
+
 def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
           steps: int, eval_step: Optional[Callable] = None,
           eval_batch_fn: Optional[Callable] = None, eval_every: int = 0,
@@ -41,8 +55,9 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
         if eval_every and eval_step is not None and (i + 1) % eval_every == 0:
             mlperf_log("eval_start")
             eb = eval_batch_fn(state.step + 100_000)
+            ep = authoritative_params(state, train_step)
             em = {k: float(v) for k, v in
-                  jax.jit(eval_step)(state.params, eb, state.bn_state).items()}
+                  jax.jit(eval_step)(ep, eb, state.bn_state).items()}
             mlperf_log("eval_accuracy", {"step": i, **{k: round(v, 4)
                                                        for k, v in em.items()}})
             mlperf_log("eval_stop")

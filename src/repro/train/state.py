@@ -12,9 +12,15 @@ from repro.core import lars, pinit
 
 class TrainState(NamedTuple):
     step: jax.Array
-    params: Any          # fp32 master
+    params: Any          # fp32 master; ZeRO-1: the gathered forward copy
     mom: Any             # fp32 momentum buffers; ZeRO-1: packed shard bufs
     bn_state: Any = None # resnet only
+    shards: Any = None   # ZeRO-1: persistent fp32 master shards, one flat
+                         # buffer per bucket in the device-major rotated
+                         # layout (bucketing.rotate_to_shards). When set,
+                         # these are the authoritative masters; with
+                         # gather_ahead the ``params`` copy lags them by
+                         # one update (it is what the last forward ran on).
 
 
 def init_packed_momentum(plan, n_shards: int = 1):
@@ -35,20 +41,48 @@ def init_packed_momentum(plan, n_shards: int = 1):
                   jnp.float32) for s in plan.bucket_sizes)
 
 
+def init_packed_shards(params, plan, n_shards: int = 1):
+    """ZeRO-1 persistent master shards: pack the fp32 params into the
+    bucket plan's flat buffers and rotate each into the device-major
+    sharded layout (``bucketing.rotate_to_shards`` — same convention as
+    ``init_packed_momentum``). Partitioned over the shard axis by the
+    train step's shard_map specs; updated in place by the sharded step
+    every step, so the fp32 masters never round-trip through the wire
+    dtype."""
+    from repro.core import bucketing
+    bufs = bucketing.pack(params, plan, dtype=jnp.float32)
+    return tuple(bucketing.rotate_to_shards(b, n_shards) for b in bufs)
+
+
+def full_params_from_shards(shards, plan, n_shards: int = 1):
+    """Reassemble the full fp32 master param pytree from the persistent
+    shard buffers (host/global view, outside shard_map) — the exact
+    inverse of ``init_packed_shards``. This is the authoritative read of a
+    sharded ``TrainState``: with gather-ahead the ``params`` field lags
+    the shards by one update."""
+    from repro.core import bucketing
+    bufs = [bucketing.unrotate_shards(b, n_shards)[:plan.bucket_sizes[i]]
+            for i, b in enumerate(shards)]
+    return bucketing.unpack(bufs, plan, dtype=jnp.float32)
+
+
 def init_state(model, seed: int = 0, mesh=None, opt_kind: str = "lars",
                sharded_plan=None, n_shards: int = 1) -> TrainState:
     """``sharded_plan`` (a ``BucketPlan``, typically
     ``train_step.bucket_plan``) switches the momentum leaves to the ZeRO-1
-    packed sharded layout expected by ``CommConfig.shard_update`` steps."""
+    packed sharded layout expected by ``CommConfig.shard_update`` steps
+    and materializes the persistent master shards."""
     params = pinit.materialize(model.param_pd, seed, mesh)
+    shards = None
     if sharded_plan is not None:
         mom = init_packed_momentum(sharded_plan, n_shards)
+        shards = init_packed_shards(params, sharded_plan, n_shards)
     else:
         mom = lars.init_momentum(params, opt_kind)
     bn = None
     if model.bn_state_pd is not None:
         bn = pinit.materialize(model.bn_state_pd, seed, mesh)
-    return TrainState(jnp.zeros((), jnp.int32), params, mom, bn)
+    return TrainState(jnp.zeros((), jnp.int32), params, mom, bn, shards)
 
 
 def abstract_state(model) -> TrainState:

@@ -85,9 +85,12 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     ``repro.comm.registry``) or a full ``configs.base.CommConfig``, which
     then also carries the bucket_mb ('auto' = autotuned) / wire dtype /
     kernel / overlap / shard_update (ZeRO-1) / backward_profile knobs.
-    With ``CommConfig.shard_update`` the state's momentum must be in the
-    packed sharded layout (``train.state.init_state(...,
-    sharded_plan=train_step.bucket_plan, n_shards=train_step.n_shards)``).
+    With ``CommConfig.shard_update`` the state must carry the packed
+    sharded momentum AND the persistent fp32 master shards
+    (``train.state.init_state(..., sharded_plan=train_step.bucket_plan,
+    n_shards=train_step.n_shards)``); the returned state's ``params`` is
+    the gathered forward copy — with ``gather_ahead`` (default) it lags
+    the authoritative ``shards`` by one update.
     ``profile_batch`` (one real batch) enables
     ``backward_profile='measured'`` for the autotuner."""
     comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
@@ -171,6 +174,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                 sizes=tuple(mesh.shape[a] for a in axes),
                 dtype_bytes=wire_bytes, family=model.cfg.family,
                 profile=profile, shard_update=shard_update,
+                gather_ahead=comm_cfg.gather_ahead,
                 param_dtype_bytes=wire_bytes)
             bucket_mb = tuned.bucket_mb
     plan = bucketing.make_plan(jax.tree.map(
@@ -179,30 +183,61 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
 
     # overlap-aware scheduling (§III-C.2): wrap each bucket group's params
     # in a custom-vjp identity so its collective fires inside the backward
-    # pass, as soon as the group's grads exist. 'naive' has no buckets; the
-    # sharded path needs the raw (unreduced) grads, so its reduce-scatters
-    # are issued per bucket after the backward instead.
-    overlap = comm_cfg.overlap and comm != "naive" and not shard_update
+    # pass, as soon as the group's grads exist. 'naive' has no buckets.
+    # With shard_update the in-backward collective is the reduce-scatter-
+    # terminal form and the shards ride out as gradient-sink cotangents.
+    overlap = comm_cfg.overlap and comm != "naive"
+    gather_ahead = comm_cfg.gather_ahead and shard_update
 
     def sharded_step(state: TrainState, batch):
-        (_, (metrics, new_bn)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params, batch, state.bn_state)
-        g_shards = ddp.reduce_scatter_grads(
-            grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
-            use_kernel=comm_cfg.use_kernel)
+        # gather-ahead (the default): rebuild this step's forward params
+        # from the persistent master shards updated by the PREVIOUS step —
+        # each bucket's all-gather is consumed only by its own layer group,
+        # so the gathers hide under the forward. Otherwise the forward
+        # reuses state.params (gathered at the end of the previous step).
+        params = (ddp.gather_ahead_params(state.shards, plan,
+                                          shard_axis=shard_axis,
+                                          wire_dtype=wire)
+                  if gather_ahead else state.params)
+        if overlap:
+            # in-backward reduce-scatter: the wrapped loss's backward runs
+            # each bucket's RS-terminal schedule the moment the group's
+            # cotangents exist; the reduced-mean fp32 shards come back as
+            # the gradients of the zero sinks — the params themselves are
+            # not differentiated, so no full reduced gradient exists.
+            sinks = ddp.make_shard_sinks(plan, n_shards)
+
+            def sink_loss(sks, p, b, bn):
+                p = ddp.wrap_params_for_overlap(
+                    p, plan, strategy=comm, axes=axes, comm_dtype=wire,
+                    use_kernel=comm_cfg.use_kernel, shard_sinks=sks)
+                return loss_fn(p, b, bn)
+
+            (_, (metrics, new_bn)), g_shards = jax.value_and_grad(
+                sink_loss, has_aux=True)(sinks, params, batch,
+                                         state.bn_state)
+            g_shards = list(g_shards)
+        else:
+            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, state.bn_state)
+            g_shards = ddp.reduce_scatter_grads(
+                grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
+                use_kernel=comm_cfg.use_kernel)
         if new_bn is not None:
             new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
         lr = schedule(state.step)
-        p_shards, m_shards = lars.sharded_update(
-            state.params, g_shards, list(state.mom), lr, opt_cfg, plan,
-            shard_axis=shard_axis, n_shards=n_shards,
+        p_shards, m_shards = lars.sharded_update_from_shards(
+            list(state.shards), g_shards, list(state.mom), lr, opt_cfg,
+            plan, shard_axis=shard_axis, n_shards=n_shards,
             update_kernel=comm_cfg.update_kernel)
-        params = ddp.all_gather_params(p_shards, plan,
-                                       shard_axis=shard_axis,
-                                       wire_dtype=wire)
+        new_params = (params if gather_ahead else
+                      ddp.all_gather_params(p_shards, plan,
+                                            shard_axis=shard_axis,
+                                            wire_dtype=wire))
         metrics = dict(metrics, lr=lr)
-        return TrainState(state.step + 1, params, m_shards, new_bn), metrics
+        return TrainState(state.step + 1, new_params, m_shards, new_bn,
+                          p_shards), metrics
 
     def local_step(state: TrainState, batch):
         if shard_update:
@@ -235,9 +270,15 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                        for k, v in batch.items()}
         state_spec = jax.tree.map(lambda _: P(), state)
         if shard_update:
-            # momentum persists sharded: dim 0 partitioned over shard_axis
+            assert state.shards is not None, (
+                "shard_update=True needs the persistent-shard state: "
+                "init_state(..., sharded_plan=train_step.bucket_plan, "
+                "n_shards=train_step.n_shards)")
+            # momentum + master shards persist sharded: dim 0 partitioned
+            # over shard_axis
             state_spec = state_spec._replace(
-                mom=jax.tree.map(lambda _: P(shard_axis), state.mom))
+                mom=jax.tree.map(lambda _: P(shard_axis), state.mom),
+                shards=jax.tree.map(lambda _: P(shard_axis), state.shards))
         return compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(state_spec, batch_specs),
@@ -251,6 +292,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     train_step.tuned = tuned
     train_step.overlap = overlap
     train_step.shard_update = shard_update
+    train_step.gather_ahead = gather_ahead
     train_step.shard_axis = shard_axis
     train_step.n_shards = n_shards
     train_step.backward_profile = profile

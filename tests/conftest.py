@@ -1,7 +1,25 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real single CPU device; only launch/dryrun.py fakes 512 devices."""
+"""Shared fixtures + the tier-marker gate. NOTE: no XLA_FLAGS here — smoke
+tests and benches must see the real single CPU device; only
+launch/dryrun.py fakes 512 devices."""
 import jax
 import pytest
+
+#: every collected test must carry at least one of these (pytest.ini
+#: declares them; --strict-markers rejects typos). tier1 = fast,
+#: in-process; tier2 = slow 8-device subprocess equivalence tests.
+#: ``make test-tier1`` runs ``-m "tier1 and not tier2"``.
+TIER_MARKERS = ("tier1", "tier2")
+
+
+def pytest_collection_modifyitems(config, items):
+    missing = [item.nodeid for item in items
+               if not any(item.get_closest_marker(m) for m in TIER_MARKERS)]
+    if missing:
+        head = "\n  ".join(missing[:10])
+        raise pytest.UsageError(
+            f"{len(missing)} collected test(s) lack a tier marker "
+            f"({'/'.join(TIER_MARKERS)}) — add a module-level pytestmark "
+            f"or a @pytest.mark.tierN decorator:\n  {head}")
 
 
 @pytest.fixture(scope="session")

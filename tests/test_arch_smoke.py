@@ -14,6 +14,8 @@ from repro.models.registry import build_model
 from repro.train import state as st
 from repro.train.step import make_train_step
 
+pytestmark = pytest.mark.tier1
+
 B, S = 2, 64
 
 

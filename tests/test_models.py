@@ -14,6 +14,8 @@ from repro.models import xlstm as xl
 from repro.models.attention import chunked_attention
 from repro.models.common import rms_norm, rope
 
+pytestmark = pytest.mark.tier1
+
 
 def test_rope_rotation_preserves_norm():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))

@@ -12,6 +12,8 @@ from repro.core.label_smoothing import smoothed_xent
 from repro.core.schedule import ScheduleConfig, make_schedule
 from repro.models.attention import chunked_attention
 
+pytestmark = pytest.mark.tier1
+
 SET = dict(max_examples=25, deadline=None)
 
 

@@ -12,6 +12,8 @@ from repro.core import pinit
 from repro.models.registry import build_model
 from repro.serve.decode import generate
 
+pytestmark = pytest.mark.tier1
+
 B, S = 2, 32
 
 

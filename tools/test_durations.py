@@ -1,0 +1,38 @@
+"""Extract the slowest-N test durations from a pytest junit XML report.
+
+Used by the tier-1 CI job (and ``make ci``) to publish a
+``slowest-tests.txt`` artifact next to the junit XML, so per-PR test-time
+regressions are visible without rerunning anything:
+
+  PYTHONPATH=src python -m tools.test_durations junit.xml slowest.txt [N]
+"""
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def slowest(junit_path: str, n: int = 20):
+    """[(seconds, 'classname::name')] sorted slowest-first, length <= n."""
+    root = ET.parse(junit_path).getroot()
+    rows = [(float(c.get("time") or 0.0),
+             f"{c.get('classname', '?')}::{c.get('name', '?')}")
+            for c in root.iter("testcase")]
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    junit, out = argv[0], argv[1]
+    n = int(argv[2]) if len(argv) > 2 else 20
+    rows = slowest(junit, n)
+    text = "".join(f"{t:9.2f}s  {name}\n" for t, name in rows)
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"slowest {len(rows)} tests -> {out}")
+    print(text, end="")
+
+
+if __name__ == "__main__":
+    main()
