@@ -687,6 +687,56 @@ def bench_gather_ahead_plan(quick: bool):
              f"hidden under next fwd) @ {ga.bucket_mb:g}MB")
 
 
+def bench_ckpt_roundtrip(quick: bool):
+    """Elastic-layer accounting row (part of --smoke, asserted in CI):
+    atomic checkpoint save -> checksum-verified load -> n->m master
+    reshard (docs/elastic.md) for the reduced-ResNet ZeRO-1 state — wall
+    time per leg plus the committed payload size."""
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.configs.base import CommConfig
+    from repro.core import lars as lars_mod
+    from repro.core.schedule import ScheduleConfig, make_schedule
+    from repro.models.registry import build_model
+    from repro.train import checkpoint as ckpt_mod
+    from repro.train import elastic
+    from repro.train import state as st_mod
+    from repro.train.step import make_train_step
+
+    model = build_model(get_config("resnet50").reduced())
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
+                                         total_steps=10))
+    cc = CommConfig(strategy="ring", bucket_mb=0.25, shard_update=True)
+    step = make_train_step(model, lars_mod.OptConfig(kind="lars"), sched,
+                           mesh=mesh, comm=cc)
+    s = st_mod.init_state(model, 0, sharded_plan=step.bucket_plan,
+                          n_shards=step.n_shards)
+    tmpl = st_mod.init_state(model, 1, sharded_plan=step.bucket_plan,
+                             n_shards=step.n_shards)
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        path = ckpt_mod.save(s, d, tag=ckpt_mod.step_tag(0),
+                             comm_plan=step.comm_plan)
+        t_save = time.perf_counter() - t0
+        nbytes = os.path.getsize(path)
+        t0 = time.perf_counter()
+        r = ckpt_mod.load(tmpl, d)          # checksum-verified
+        jax.block_until_ready(r.shards)
+        t_load = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        new = elastic.reshard_buffers(list(r.shards), step.bucket_plan,
+                                      step.n_shards, step.bucket_plan, 4)
+        jax.block_until_ready(new)
+        t_reshard = time.perf_counter() - t0
+    emit("ckpt.roundtrip", (t_save + t_load + t_reshard) * 1e6,
+         f"atomic save {t_save*1e3:.0f}ms + verified load "
+         f"{t_load*1e3:.0f}ms + reshard {step.n_shards}->4 "
+         f"{t_reshard*1e3:.0f}ms; payload {nbytes/2**20:.2f}MB "
+         f"(+CommPlan, sha256 manifest)")
+
+
 def bench_autotune_plan(quick: bool):
     """Pure cost-model rows (no training): the autotuner's joint
     (schedule x bucket size) pick per production mesh — the plan
@@ -714,14 +764,15 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_kernel_lars_update, bench_comm_bucketing,
        bench_comm_schedules, bench_comm_overlap, bench_comm_shard_update,
        bench_autotune_plan, bench_shard_update_plan,
-       bench_gather_ahead_plan]
+       bench_gather_ahead_plan, bench_ckpt_roundtrip]
 
 # --smoke: the CI micro-run — pure-math projections only (no subprocess
 # training, no 8-device compiles), finishes in seconds and emits the JSON
 # artifact that tracks the bench trajectory per-PR (including the sharded-
 # update and gather-ahead accounting rows)
 SMOKE = [bench_table1, bench_fig2, bench_autotune_plan,
-         bench_shard_update_plan, bench_gather_ahead_plan]
+         bench_shard_update_plan, bench_gather_ahead_plan,
+         bench_ckpt_roundtrip]
 
 
 def main() -> None:

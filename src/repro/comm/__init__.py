@@ -19,3 +19,8 @@ from repro.comm.cost import (  # noqa: F401
 from repro.comm.autotune import (  # noqa: F401
     CANDIDATES_MB, BackwardProfile, OverlapSim, TunedPlan, best_plan,
     simulate)
+# Serializable comm plans (elastic resume; docs/elastic.md). Like autotune,
+# ``repro.comm.plan`` stays a module attribute — only the object type and
+# its error are lifted to the package root.
+from repro.comm.plan import CommPlan, CommPlanError  # noqa: F401
+

@@ -1,0 +1,257 @@
+"""CommPlan: the comm layer's choices as a first-class serializable object.
+
+A trained run's communication behavior is fully determined by (a) the
+``CommConfig`` knobs (schedule, wire dtype, overlap/shard-update/gather-
+ahead switches), (b) the resolved ``BucketPlan`` (bucket boundaries over
+the packing order — possibly autotuned), and (c) the mesh it was resolved
+against (axes, sizes, shard axis). Today those live as closure state inside
+the jitted train step; this module promotes them to a versioned, JSON
+round-trippable **CommPlan** that is saved alongside every checkpoint
+(``train/checkpoint.save(comm_plan=...)``) and drives elastic resume:
+
+* ``CommPlan.comm_config()`` rebuilds the ``CommConfig`` (with the
+  *requested* bucket size, so ``'auto'`` re-autotunes against the NEW mesh
+  when ``make_train_step`` re-jits on load);
+* ``CommPlan.bucket_plan(template_tree)`` reconstructs the exact
+  ``BucketPlan`` the checkpointed shards were packed under — the treedef is
+  rebuilt from a template parameter tree and every slot is cross-checked
+  against the serialized layout, so a model/plan mismatch fails loudly
+  instead of silently mis-slicing buffers;
+* ``retarget(axes, sizes)`` re-resolves the plan for a different mesh
+  (new shard axis / shard count, re-autotuned bucket size) without building
+  a train step — what ``--resume-elastic`` reports before re-jitting.
+
+The design follows ngraph-neon's comm-as-graph-objects idea
+(``ngraph/op_graph/comm_nodes.py``): the collective layout is data, not
+code, so the same program retargets a different device set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Optional, Sequence, Tuple, Union
+
+PLAN_VERSION = 1
+
+
+class CommPlanError(RuntimeError):
+    """Raised on version/schema/layout mismatches. Deliberately a real
+    exception (not an assert): plan validation must survive ``python -O``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    """Serializable mirror of ``bucketing.TensorSlot`` (no treedef)."""
+    path: str
+    shape: Tuple[int, ...]
+    size: int
+    padded: int
+    bucket: int
+    offset: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """One run's resolved comm choices. Frozen + fully JSON-serializable:
+    ``loads(dumps(plan)) == plan`` holds by dataclass equality."""
+    schedule: str                       # resolved strategy name
+    bucket_mb: float                    # RESOLVED bucket size (post-autotune)
+    requested_bucket_mb: Union[str, float]   # 'auto' or the explicit value
+    wire_dtype: str                     # 'bf16' | 'f32'
+    overlap: bool
+    shard_update: bool
+    update_kernel: bool
+    gather_ahead: bool
+    backward_profile: str
+    mesh_axes: Tuple[str, ...]
+    mesh_sizes: Tuple[int, ...]
+    shard_axis: str
+    n_shards: int
+    bucket_sizes: Tuple[int, ...]
+    slots: Tuple[SlotSpec, ...]
+    version: int = PLAN_VERSION
+
+    # ------------------------------------------------------------- rebuild
+
+    def comm_config(self, *, reautotune: bool = True):
+        """The ``CommConfig`` this plan resolves from. ``reautotune=True``
+        (the elastic-resume default) hands back the *requested* bucket size
+        — ``'auto'`` then re-runs the autotuner against whatever mesh the
+        next ``make_train_step`` is built on; ``False`` pins the resolved
+        size (bit-identical bucket boundaries on the same param tree)."""
+        from repro.configs.base import CommConfig
+        return CommConfig(
+            strategy=self.schedule,
+            bucket_mb=(self.requested_bucket_mb if reautotune
+                       else self.bucket_mb),
+            wire_dtype=self.wire_dtype, overlap=self.overlap,
+            shard_update=self.shard_update, update_kernel=self.update_kernel,
+            gather_ahead=self.gather_ahead,
+            backward_profile=self.backward_profile)
+
+    @property
+    def wire_dtype_bytes(self) -> int:
+        return 2 if self.wire_dtype == "bf16" else 4
+
+    def bucket_plan(self, template_tree):
+        """Reconstruct the ``BucketPlan`` these buffers were packed under.
+        The treedef comes from ``template_tree`` (a parameter pytree of the
+        same model); every slot's path/shape/layout is validated against
+        the serialized plan so a wrong template fails with a diff, not a
+        silent mis-slice of the checkpointed shard buffers."""
+        from repro.core import bucketing
+        rebuilt = bucketing.make_plan(template_tree,
+                                      bucket_mb=self.bucket_mb,
+                                      dtype_bytes=self.wire_dtype_bytes)
+        got = tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
+                             s.bucket, s.offset) for s in rebuilt.slots)
+        if got != self.slots or tuple(rebuilt.bucket_sizes) != \
+                tuple(self.bucket_sizes):
+            diffs = [f"  {a!r} != {b!r}" for a, b in zip(got, self.slots)
+                     if a != b][:5]
+            if len(got) != len(self.slots):
+                diffs.append(f"  slot count {len(got)} != {len(self.slots)}")
+            raise CommPlanError(
+                "template parameter tree does not reproduce the serialized "
+                "bucket plan — wrong model/config for this checkpoint?\n"
+                + "\n".join(diffs))
+        return rebuilt
+
+    def retarget(self, axes: Sequence[str], sizes: Sequence[int],
+                 template_tree, *, family: Optional[str] = None
+                 ) -> "CommPlan":
+        """Re-resolve this plan for a different mesh shape: new shard
+        axis/count (``cost.shard_axis_size``), and — when the original run
+        requested ``bucket_mb='auto'`` — a re-autotuned bucket size for the
+        new topology. Pure metadata; the re-jit happens when the caller
+        builds a train step from ``comm_config()`` on the new mesh."""
+        from repro.comm.cost import shard_axis_size
+        from repro.core import bucketing
+        axes, sizes = tuple(axes), tuple(int(s) for s in sizes)
+        shard_axis, n_shards = shard_axis_size(axes, sizes)
+        bucket_mb = self.bucket_mb
+        if self.requested_bucket_mb == "auto":
+            from repro.comm.autotune import autotune
+            bucket_mb = autotune(
+                template_tree, schedule=self.schedule, axes=axes,
+                sizes=sizes, dtype_bytes=self.wire_dtype_bytes,
+                family=family, shard_update=self.shard_update,
+                gather_ahead=self.gather_ahead,
+                param_dtype_bytes=self.wire_dtype_bytes).bucket_mb
+        plan = bucketing.make_plan(template_tree, bucket_mb=bucket_mb,
+                                   dtype_bytes=self.wire_dtype_bytes)
+        return dataclasses.replace(
+            self, bucket_mb=bucket_mb, mesh_axes=axes, mesh_sizes=sizes,
+            shard_axis=shard_axis,
+            n_shards=n_shards if self.shard_update else 1,
+            bucket_sizes=tuple(plan.bucket_sizes),
+            slots=tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
+                                 s.bucket, s.offset) for s in plan.slots))
+
+
+def make(comm_cfg, bucket_plan, *, resolved_bucket_mb: float,
+         mesh_axes: Sequence[str], mesh_sizes: Sequence[int],
+         shard_axis: str, n_shards: int, strategy: Optional[str] = None,
+         overlap: Optional[bool] = None, shard_update: Optional[bool] = None,
+         gather_ahead: Optional[bool] = None) -> CommPlan:
+    """Build a ``CommPlan`` from a resolved train step's pieces. The
+    ``overlap``/``shard_update``/``gather_ahead`` overrides record the
+    *effective* values (``make_train_step`` downgrades them for 'naive' or
+    replicated paths); ``None`` keeps the config's."""
+    pick = lambda ov, cfg: cfg if ov is None else ov  # noqa: E731
+    return CommPlan(
+        schedule=strategy or comm_cfg.strategy,
+        bucket_mb=float(resolved_bucket_mb),
+        requested_bucket_mb=comm_cfg.bucket_mb,
+        wire_dtype=comm_cfg.wire_dtype,
+        overlap=pick(overlap, comm_cfg.overlap),
+        shard_update=pick(shard_update, comm_cfg.shard_update),
+        update_kernel=comm_cfg.update_kernel,
+        gather_ahead=pick(gather_ahead, comm_cfg.gather_ahead),
+        backward_profile=comm_cfg.backward_profile,
+        mesh_axes=tuple(mesh_axes),
+        mesh_sizes=tuple(int(s) for s in mesh_sizes),
+        shard_axis=shard_axis, n_shards=int(n_shards),
+        bucket_sizes=tuple(int(s) for s in bucket_plan.bucket_sizes),
+        slots=tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
+                             s.bucket, s.offset)
+                    for s in bucket_plan.slots))
+
+
+# ----------------------------------------------------------- JSON (de)ser
+
+def to_dict(plan: CommPlan) -> dict:
+    d = dataclasses.asdict(plan)
+    d["slots"] = [list(dataclasses.astuple(s)) for s in plan.slots]
+    return d
+
+
+def from_dict(d: dict) -> CommPlan:
+    if not isinstance(d, dict) or "version" not in d:
+        raise CommPlanError("not a CommPlan payload (no 'version' field)")
+    if d["version"] != PLAN_VERSION:
+        raise CommPlanError(
+            f"CommPlan version {d['version']!r} is not supported by this "
+            f"build (expected {PLAN_VERSION}) — resume with a matching "
+            f"repro version or re-serialize the plan")
+    try:
+        slots = tuple(
+            SlotSpec(path, tuple(int(x) for x in shape), int(size),
+                     int(padded), int(bucket), int(offset))
+            for path, shape, size, padded, bucket, offset in d["slots"])
+        req = d["requested_bucket_mb"]
+        return CommPlan(
+            schedule=str(d["schedule"]), bucket_mb=float(d["bucket_mb"]),
+            requested_bucket_mb=(req if req == "auto" else float(req)),
+            wire_dtype=str(d["wire_dtype"]), overlap=bool(d["overlap"]),
+            shard_update=bool(d["shard_update"]),
+            update_kernel=bool(d["update_kernel"]),
+            gather_ahead=bool(d["gather_ahead"]),
+            backward_profile=str(d["backward_profile"]),
+            mesh_axes=tuple(d["mesh_axes"]),
+            mesh_sizes=tuple(int(s) for s in d["mesh_sizes"]),
+            shard_axis=str(d["shard_axis"]), n_shards=int(d["n_shards"]),
+            bucket_sizes=tuple(int(s) for s in d["bucket_sizes"]),
+            slots=slots, version=int(d["version"]))
+    except (KeyError, TypeError, ValueError) as e:
+        raise CommPlanError(f"malformed CommPlan payload: {e!r}") from e
+
+
+def dumps(plan: CommPlan) -> str:
+    return json.dumps(to_dict(plan), indent=1, sort_keys=True)
+
+
+def loads(s: str) -> CommPlan:
+    try:
+        d = json.loads(s)
+    except json.JSONDecodeError as e:
+        raise CommPlanError(f"CommPlan JSON does not parse: {e}") from e
+    return from_dict(d)
+
+
+def save(plan: CommPlan, path: str) -> str:
+    """Atomic write (tmp + ``os.replace``): a kill mid-save can never leave
+    a half-written plan file."""
+    data = dumps(plan).encode()
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load(path: str) -> CommPlan:
+    if not os.path.exists(path):
+        raise CommPlanError(f"no CommPlan at {path!r}")
+    with open(path) as f:
+        return loads(f.read())

@@ -76,6 +76,25 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume-elastic", action="store_true",
+                    help="resume from --ckpt-dir onto THIS mesh, resharding "
+                         "the ZeRO-1 masters/momentum n->m if the device "
+                         "count changed; the saved CommPlan drives the "
+                         "packing layout and is re-autotuned/re-jitted for "
+                         "the new mesh (docs/elastic.md)")
+    ap.add_argument("--keep-last-k", type=int, default=0, metavar="K",
+                    help="retention: prune step-tagged checkpoints beyond "
+                         "the newest K (0 = keep everything)")
+    ap.add_argument("--step-timeout-s", type=float, default=0.0,
+                    help="step watchdog budget: a step exceeding this is "
+                         "abandoned, the last good checkpoint restored, "
+                         "and the step retried with backoff (0 = off; "
+                         "disables buffer donation)")
+    ap.add_argument("--max-step-retries", type=int, default=3)
+    ap.add_argument("--inject-fault", default=None, metavar="SPEC",
+                    help="fault-injection harness (train/faults.py): "
+                         "comma-separated kind@step[:arg] — e.g. kill@7, "
+                         "sigterm@5, stall@3:2.5, corrupt@4")
     ap.add_argument("--data", default="lcg", choices=["lcg", "uniform"])
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args(argv)
@@ -113,6 +132,29 @@ def main(argv=None):
                           update_kernel=args.update_kernel,
                           gather_ahead=not args.no_gather_ahead,
                           backward_profile=args.backward_profile)
+    saved_plan = None
+    if args.resume_elastic:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume-elastic needs --ckpt-dir")
+        from repro.train import checkpoint as ckpt_mod
+        try:
+            saved_plan = ckpt_mod.load_comm_plan(args.ckpt_dir)
+        except ckpt_mod.CheckpointError:
+            saved_plan = None        # replicated/xla run: plain restore
+        if saved_plan is not None:
+            # the committed plan wins over the CLI comm flags: the resumed
+            # run must keep the checkpoint's packing semantics;
+            # bucket_mb='auto' re-autotunes below against THIS mesh when
+            # make_train_step re-jits
+            comm_cfg = saved_plan.comm_config(reautotune=True)
+            print(
+                f"resuming elastically from {args.ckpt_dir}: CommPlan "
+                f"schedule={saved_plan.schedule} "
+                f"bucket={saved_plan.bucket_mb:g}MB "
+                f"(requested {saved_plan.requested_bucket_mb!r}), saved "
+                f"on mesh "
+                f"{dict(zip(saved_plan.mesh_axes, saved_plan.mesh_sizes))} "
+                f"with n_shards={saved_plan.n_shards}", flush=True)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
                                  mesh=mesh, comm=comm_cfg,
                                  grad_accum=args.grad_accum,
@@ -138,10 +180,24 @@ def main(argv=None):
                        sharded_plan=train_step.bucket_plan if sharded
                        else None,
                        n_shards=train_step.n_shards if sharded else 1)
+    if args.resume_elastic:
+        from repro.train import elastic
+        new_n = train_step.n_shards if sharded else 1
+        state = elastic.load_resharded(
+            args.ckpt_dir, state, getattr(train_step, "bucket_plan", None),
+            new_n, old_comm_plan=saved_plan)
+        old_n = saved_plan.n_shards if saved_plan is not None else 1
+        print(f"elastic resume: restored step {int(state.step)}, "
+              f"resharded {old_n} -> {new_n} shards", flush=True)
+    from repro.train.faults import FaultInjector, parse_faults
     state, history = loop.train(
         state, train_step, batch_fn, steps=args.steps, eval_step=eval_step,
         eval_batch_fn=batch_fn, eval_every=args.eval_every,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed)
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, seed=args.seed,
+        keep_last_k=args.keep_last_k, step_timeout_s=args.step_timeout_s,
+        max_step_retries=args.max_step_retries,
+        comm_plan=getattr(train_step, "comm_plan", None),
+        faults=FaultInjector(parse_faults(args.inject_fault)))
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)

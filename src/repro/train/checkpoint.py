@@ -1,12 +1,36 @@
-"""Checkpointing: pytree <-> .npz with path-keyed entries + step metadata.
+"""Fault-tolerant checkpointing: pytree <-> .npz with path-keyed entries,
+atomic commits, and a checksum manifest (docs/elastic.md).
+
+Durability contract (the elastic/fault-tolerance layer leans on it):
+
+* **Atomic**: every file — payload ``.npz``, ``meta_<tag>.json``, CommPlan,
+  and the manifest — is written to a temp file in the same directory and
+  ``os.replace``d into place. A SIGKILL mid-save can never leave a
+  half-written file under a committed name.
+* **Committed = in the manifest**: a checkpoint exists only once
+  ``MANIFEST.json`` records its tag with the payload's sha256. The loader
+  verifies the checksum before touching the arrays, so torn writes and
+  bit-rot surface as :class:`CheckpointCorruptError`, and ``tag=None``
+  loads fall back to the newest entry that still verifies.
+* **Retention**: ``keep_last_k`` prunes the oldest *step-tagged* entries
+  (``step00000042``-style tags, what the training loop writes) beyond k;
+  hand-named tags are never pruned.
+* Validation raises real exceptions (:class:`CheckpointMismatchError`),
+  never ``assert`` — asserts vanish under ``python -O`` and would let a
+  shape/layout mismatch silently corrupt a restore.
 
 Arrays are gathered to host before saving (fine for the CPU validation
-scale; on a real pod this would be per-host sharded — noted in DESIGN.md)."""
+scale; on a real pod this would be per-host sharded — noted in DESIGN.md).
+"""
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
-from typing import Any
+import re
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -14,6 +38,32 @@ import numpy as np
 from repro.train.state import TrainState
 
 _SEP = "|"
+MANIFEST = "MANIFEST.json"
+_STEP_TAG = re.compile(r"^step(\d{8})$")
+
+
+class CheckpointError(RuntimeError):
+    """Base for all checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """Payload bytes do not match the manifest checksum (torn write /
+    bit-rot / tampering), or the file vanished."""
+
+
+class CheckpointMismatchError(CheckpointError):
+    """Checkpoint verifies but does not fit the template (shapes, missing
+    keys, sharded-vs-replicated layout)."""
+
+
+def step_tag(step: int) -> str:
+    """Canonical step-indexed tag: sortable, unique per step, prunable."""
+    return f"step{int(step):08d}"
+
+
+def _is_step_tag(tag: str) -> Optional[int]:
+    m = _STEP_TAG.match(tag)
+    return int(m.group(1)) if m else None
 
 
 def _flatten(tree):
@@ -26,9 +76,55 @@ def _flatten(tree):
     return out
 
 
-def save(state: TrainState, ckpt_dir: str, *, tag: str = "last") -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    path = os.path.join(ckpt_dir, f"ckpt_{tag}.npz")
+def _atomic_write(path: str, data: bytes) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def read_manifest(ckpt_dir: str) -> Optional[dict]:
+    path = os.path.join(ckpt_dir, MANIFEST)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            m = json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            f"manifest {path!r} does not parse ({e}) — the directory needs "
+            f"manual repair; individual ckpt_<tag>.npz files may still load "
+            f"via an explicit tag") from e
+    return m
+
+
+def _write_manifest(ckpt_dir: str, manifest: dict) -> None:
+    _atomic_write(os.path.join(ckpt_dir, MANIFEST),
+                  json.dumps(manifest, indent=1, sort_keys=True).encode())
+
+
+def available_tags(ckpt_dir: str) -> List[str]:
+    """Committed tags, oldest save first."""
+    m = read_manifest(ckpt_dir)
+    if not m:
+        return []
+    ents = sorted(m["entries"].items(), key=lambda kv: kv[1]["seq"])
+    return [k for k, _ in ents]
+
+
+def latest_tag(ckpt_dir: str) -> Optional[str]:
+    m = read_manifest(ckpt_dir)
+    return m["latest"] if m else None
+
+
+def _payload_bytes(state: TrainState) -> Tuple[bytes, dict]:
     payload = {}
     payload.update({f"params{_SEP}{k}": v
                     for k, v in _flatten(state.params).items()})
@@ -42,50 +138,215 @@ def save(state: TrainState, ckpt_dir: str, *, tag: str = "last") -> str:
         # of a shard_update run — state.params may lag them by one update)
         payload.update({f"shards{_SEP}{k}": v
                         for k, v in _flatten(tuple(state.shards)).items()})
-    np.savez(path, **payload)
-    meta = {"step": int(state.step), "tag": tag,
-            "sharded": state.shards is not None}
-    with open(os.path.join(ckpt_dir, f"meta_{tag}.json"), "w") as f:
-        json.dump(meta, f)
-    return path
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    meta = {"step": int(state.step), "sharded": state.shards is not None}
+    return buf.getvalue(), meta
 
 
-def load(template: TrainState, ckpt_dir: str, *, tag: str = "last"
-         ) -> TrainState:
-    """Restore into the structure of ``template`` (shapes must match)."""
-    data = np.load(os.path.join(ckpt_dir, f"ckpt_{tag}.npz"))
+def save(state: TrainState, ckpt_dir: str, *, tag: str = "last",
+         comm_plan=None, keep_last_k: int = 0) -> str:
+    """Atomically commit ``state`` under ``tag``. ``comm_plan`` (a
+    ``repro.comm.plan.CommPlan``) is serialized alongside so an elastic
+    resume can rebuild the exact packing layout the shard buffers use.
+    ``keep_last_k > 0`` prunes older step-tagged checkpoints beyond k."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    data, meta = _payload_bytes(state)
+    meta["tag"] = tag
+    sha = hashlib.sha256(data).hexdigest()
+    fname = f"ckpt_{tag}.npz"
+    _atomic_write(os.path.join(ckpt_dir, fname), data)
+    _atomic_write(os.path.join(ckpt_dir, f"meta_{tag}.json"),
+                  json.dumps(meta).encode())
+    has_plan = comm_plan is not None
+    if has_plan:
+        from repro.comm import plan as comm_plan_mod
+        comm_plan_mod.save(comm_plan,
+                           os.path.join(ckpt_dir, f"commplan_{tag}.json"))
+
+    manifest = read_manifest(ckpt_dir) or {"version": 1, "latest": None,
+                                           "seq": 0, "entries": {}}
+    manifest["seq"] = int(manifest.get("seq", 0)) + 1
+    manifest["entries"][tag] = {
+        "file": fname, "sha256": sha, "bytes": len(data),
+        "step": meta["step"], "sharded": meta["sharded"],
+        "comm_plan": f"commplan_{tag}.json" if has_plan else None,
+        "seq": manifest["seq"]}
+    manifest["latest"] = tag
+    _write_manifest(ckpt_dir, manifest)
+    if keep_last_k:
+        prune(ckpt_dir, keep_last_k)
+    return os.path.join(ckpt_dir, fname)
+
+
+def prune(ckpt_dir: str, keep_last_k: int) -> List[str]:
+    """Drop the oldest step-tagged checkpoints beyond ``keep_last_k``
+    (manifest entry first, then files — a kill mid-prune leaves orphaned
+    files, never a manifest entry pointing at nothing valid). Hand-named
+    tags ('last', 'best', ...) are never pruned. Returns dropped tags."""
+    manifest = read_manifest(ckpt_dir)
+    if not manifest or keep_last_k <= 0:
+        return []
+    stepped = sorted((t for t in manifest["entries"]
+                      if _is_step_tag(t) is not None),
+                     key=lambda t: manifest["entries"][t]["seq"])
+    drop = stepped[:-keep_last_k] if keep_last_k < len(stepped) else []
+    for tag in drop:
+        ent = manifest["entries"].pop(tag)
+        if manifest["latest"] == tag:       # cannot happen in practice
+            manifest["latest"] = stepped[-1]
+        _write_manifest(ckpt_dir, manifest)
+        for f in (ent["file"], f"meta_{tag}.json", ent.get("comm_plan")):
+            if f:
+                try:
+                    os.unlink(os.path.join(ckpt_dir, f))
+                except FileNotFoundError:
+                    pass
+    return drop
+
+
+def verify(ckpt_dir: str, tag: str) -> dict:
+    """Check ``tag``'s payload against its manifest checksum. Returns the
+    manifest entry; raises :class:`CheckpointCorruptError` on mismatch or
+    a missing file, :class:`CheckpointError` for an unknown tag."""
+    manifest = read_manifest(ckpt_dir)
+    if not manifest or tag not in manifest["entries"]:
+        raise CheckpointError(
+            f"tag {tag!r} is not committed in {ckpt_dir!r} (manifest has "
+            f"{available_tags(ckpt_dir)})")
+    ent = manifest["entries"][tag]
+    path = os.path.join(ckpt_dir, ent["file"])
+    if not os.path.exists(path):
+        raise CheckpointCorruptError(
+            f"checkpoint payload {path!r} is missing but committed in the "
+            f"manifest — the directory was partially deleted")
+    with open(path, "rb") as f:
+        sha = hashlib.sha256(f.read()).hexdigest()
+    if sha != ent["sha256"]:
+        raise CheckpointCorruptError(
+            f"checksum mismatch for {path!r}: manifest sha256 "
+            f"{ent['sha256'][:12]}…, file {sha[:12]}… — the payload is "
+            f"torn or bit-rotted; falling back to an older checkpoint "
+            f"(load with tag=None) is the safe recovery")
+    return ent
+
+
+def _resolve_tag(ckpt_dir: str, tag: Optional[str]) -> str:
+    """``tag=None`` -> newest entry that verifies (skipping corrupt ones
+    with a warning); explicit tags are returned as-is (legacy directories
+    without a manifest keep working that way)."""
+    if tag is not None:
+        return tag
+    tags = available_tags(ckpt_dir)
+    if not tags:
+        # legacy layout (pre-manifest): fall back to the old default
+        if os.path.exists(os.path.join(ckpt_dir, "ckpt_last.npz")):
+            return "last"
+        raise CheckpointError(
+            f"no committed checkpoint in {ckpt_dir!r} (no manifest, no "
+            f"legacy ckpt_last.npz)")
+    last_err = None
+    for t in reversed(tags):
+        try:
+            verify(ckpt_dir, t)
+            return t
+        except CheckpointCorruptError as e:
+            print(f"checkpoint {t!r} fails verification ({e}); trying the "
+                  f"previous one", flush=True)
+            last_err = e
+    raise CheckpointCorruptError(
+        f"every committed checkpoint in {ckpt_dir!r} fails verification; "
+        f"last error: {last_err}")
+
+
+def load_arrays(ckpt_dir: str, *, tag: Optional[str] = None
+                ) -> Tuple[dict, Dict[str, np.ndarray], Any]:
+    """Raw restore: ``(meta, {flat key: array}, comm_plan | None)`` with
+    checksum verification but no template — what elastic resume uses to
+    reshard before a template of the new layout exists."""
+    tag = _resolve_tag(ckpt_dir, tag)
+    manifest = read_manifest(ckpt_dir)
+    if manifest and tag in manifest["entries"]:
+        verify(ckpt_dir, tag)
+    path = os.path.join(ckpt_dir, f"ckpt_{tag}.npz")
+    if not os.path.exists(path):
+        raise CheckpointError(f"no checkpoint payload at {path!r}")
     with open(os.path.join(ckpt_dir, f"meta_{tag}.json")) as f:
         meta = json.load(f)
+    data = dict(np.load(path).items())
+    plan = None
+    plan_path = os.path.join(ckpt_dir, f"commplan_{tag}.json")
+    if os.path.exists(plan_path):
+        from repro.comm import plan as comm_plan_mod
+        plan = comm_plan_mod.load(plan_path)
+    return meta, data, plan
 
-    def restore(prefix, tree):
-        flat = _flatten(tree)
-        out = {}
-        for k in flat:
-            arr = data[f"{prefix}{_SEP}{k}"]
-            assert arr.shape == flat[k].shape, (k, arr.shape, flat[k].shape)
-            out[k] = arr
-        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
-        new_leaves = []
-        for path, leaf in leaves_p:
-            key = _SEP.join(str(getattr(kk, "key", getattr(kk, "idx", kk)))
-                            for kk in path)
-            new_leaves.append(jax.numpy.asarray(out[key], leaf.dtype))
-        return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
-    if template.shards is not None:
-        assert meta.get("sharded"), (
+def load_comm_plan(ckpt_dir: str, *, tag: Optional[str] = None):
+    """The CommPlan committed with ``tag`` (default: newest verifying
+    checkpoint); raises :class:`CheckpointError` if none was saved."""
+    tag = _resolve_tag(ckpt_dir, tag)
+    path = os.path.join(ckpt_dir, f"commplan_{tag}.json")
+    if not os.path.exists(path):
+        raise CheckpointError(
+            f"checkpoint {tag!r} in {ckpt_dir!r} carries no CommPlan — it "
+            f"predates the elastic layer (or was saved without "
+            f"comm_plan=...); elastic resume needs the serialized packing "
+            f"layout")
+    from repro.comm import plan as comm_plan_mod
+    return comm_plan_mod.load(path)
+
+
+def _restore(prefix: str, tree, data) -> Any:
+    flat = _flatten(tree)
+    missing = [k for k in flat if f"{prefix}{_SEP}{k}" not in data]
+    if missing:
+        raise CheckpointMismatchError(
+            f"checkpoint lacks {len(missing)} {prefix!r} entr"
+            f"{'y' if len(missing) == 1 else 'ies'} the template expects "
+            f"(first: {missing[:3]}) — wrong model/optimizer/shard layout "
+            f"for this checkpoint")
+    for k in flat:
+        arr = data[f"{prefix}{_SEP}{k}"]
+        if arr.shape != flat[k].shape:
+            raise CheckpointMismatchError(
+                f"shape mismatch restoring {prefix}{_SEP}{k}: checkpoint "
+                f"has {arr.shape}, template expects {flat[k].shape} — the "
+                f"checkpoint was written under a different config or shard "
+                f"count (for a device-count change, resume via "
+                f"train.elastic.load_resharded / --resume-elastic)")
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    new_leaves = []
+    for path, leaf in leaves_p:
+        key = _SEP.join(str(getattr(kk, "key", getattr(kk, "idx", kk)))
+                        for kk in path)
+        new_leaves.append(jax.numpy.asarray(data[f"{prefix}{_SEP}{key}"],
+                                            leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load(template: TrainState, ckpt_dir: str, *, tag: Optional[str] = None
+         ) -> TrainState:
+    """Restore into the structure of ``template`` (shapes must match —
+    for an n→m device-count change use ``train.elastic.load_resharded``).
+    ``tag=None`` picks the newest checkpoint that passes checksum
+    verification."""
+    meta, data, _ = load_arrays(ckpt_dir, tag=tag)
+    if template.shards is not None and not meta.get("sharded"):
+        raise CheckpointMismatchError(
             "template expects ZeRO-1 master shards but the checkpoint was "
-            "saved from a non-sharded state")
-    else:
-        assert not meta.get("sharded"), (
+            "saved from a non-sharded state — restore into a non-sharded "
+            "template (init_state without sharded_plan) instead")
+    if template.shards is None and meta.get("sharded"):
+        raise CheckpointMismatchError(
             "checkpoint holds ZeRO-1 master shards (and its params copy "
             "may lag them by one update) but the template is non-sharded "
             "— rebuild with init_state(..., sharded_plan=..., n_shards=...)")
-    params = restore("params", template.params)
-    mom = restore("mom", template.mom)
-    bn = (restore("bn", template.bn_state)
+    params = _restore("params", template.params, data)
+    mom = _restore("mom", template.mom, data)
+    bn = (_restore("bn", template.bn_state, data)
           if template.bn_state is not None else None)
-    shards = (tuple(restore("shards", tuple(template.shards)))
+    shards = (tuple(_restore("shards", tuple(template.shards), data))
               if template.shards is not None else None)
     return TrainState(jax.numpy.asarray(meta["step"], jax.numpy.int32),
                       params, mom, bn, shards)

@@ -1,0 +1,149 @@
+"""Elastic n→m resharded resume (docs/elastic.md).
+
+A ZeRO-1 run persists its fp32 masters and momentum as per-bucket flat
+buffers in the DEVICE-major rotated layout (``bucketing.rotate_to_shards``)
+— shapes are a function of the shard count n, so a checkpoint written on an
+8-device mesh cannot be ``checkpoint.load``ed into a 4-device template.
+This module closes that gap: the serialized **CommPlan** committed next to
+the payload pins the exact packing layout, and the reshard goes through the
+mathematically-exact round trip
+
+    old shards --unrotate(n)--> packed buckets --unpack--> fp32 pytree
+               --pack--> packed buckets --rotate(m)--> new shards
+
+Every hop is a pure relayout (slice / reshape / concat / zero-pad) in fp32:
+the masters land **bit-exact** on the new mesh, and since the padding tail
+of every bucket carries zero momentum by construction (zero grads × zero
+params there), the momentum round-trips bit-exact too. The two plans need
+not even share bucket boundaries — a resume may re-autotune the bucket size
+for the new topology and reshard straight into the new plan.
+
+Re-jitting is the caller's job: build the train step for the new mesh from
+``comm_plan.comm_config()`` (``'auto'`` bucket sizes re-autotune there) and
+hand its ``bucket_plan``/``n_shards`` to :func:`load_resharded`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import bucketing
+from repro.train import checkpoint as ckpt
+from repro.train.state import (TrainState, full_params_from_shards,
+                               init_packed_shards)
+
+
+class ElasticResumeError(ckpt.CheckpointError):
+    """Elastic resume preconditions not met (actionable message)."""
+
+
+def reshard_buffers(bufs: Sequence, old_plan: bucketing.BucketPlan,
+                    old_n: int, new_plan: bucketing.BucketPlan,
+                    new_n: int) -> List[jnp.ndarray]:
+    """Per-bucket device-major buffers under ``(old_plan, old_n)`` -> the
+    same values laid out for ``(new_plan, new_n)``. Exact in fp32 (pure
+    relayout — no arithmetic). The plans may differ in bucket boundaries;
+    they must describe the same tensor set (same packing order)."""
+    if len(bufs) != old_plan.n_buckets:
+        raise ElasticResumeError(
+            f"{len(bufs)} shard buffers for a {old_plan.n_buckets}-bucket "
+            f"plan — checkpoint and CommPlan disagree")
+    for b, buf in enumerate(bufs):
+        want = old_n * bucketing.shard_elems(old_plan.bucket_sizes[b],
+                                             old_n)
+        if buf.shape != (want,):
+            raise ElasticResumeError(
+                f"bucket {b} shard buffer has shape {buf.shape}, expected "
+                f"({want},) for n_shards={old_n} — wrong n_shards/plan for "
+                f"this checkpoint")
+    tree = full_params_from_shards([jnp.asarray(b) for b in bufs],
+                                   old_plan, old_n)
+    return list(init_packed_shards(tree, new_plan, new_n))
+
+
+def load_resharded(ckpt_dir: str, template: TrainState,
+                   new_plan: bucketing.BucketPlan, new_n_shards: int, *,
+                   tag: Optional[str] = None,
+                   old_comm_plan=None) -> TrainState:
+    """Restore a ZeRO-1 checkpoint onto a mesh with a different shard
+    count (and possibly different bucket boundaries).
+
+    ``template`` is a freshly-initialized state for the NEW layout
+    (``init_state(..., sharded_plan=new_plan, n_shards=new_n_shards)``);
+    its param pytree doubles as the treedef source for rebuilding the OLD
+    plan from the committed CommPlan. fp32 masters and momentum restore
+    bit-exact; the ``params`` forward copy is rebuilt from the masters (a
+    gather-ahead step re-gathers from the shards anyway, so the resumed
+    run's first forward matches the uninterrupted one).
+
+    A non-sharded checkpoint degrades gracefully to a plain
+    ``checkpoint.load`` (device count does not constrain replicated
+    states)."""
+    meta, data, saved_plan = ckpt.load_arrays(ckpt_dir, tag=tag)
+    if not meta.get("sharded"):
+        if template.shards is not None:
+            raise ElasticResumeError(
+                "checkpoint is non-sharded but the resume template carries "
+                "ZeRO-1 shards — resume with shard_update disabled, or "
+                "re-checkpoint from a sharded run")
+        return ckpt.load(template, ckpt_dir, tag=tag)
+    if template.shards is None:
+        raise ElasticResumeError(
+            "sharded checkpoint needs a sharded resume template: "
+            "init_state(..., sharded_plan=train_step.bucket_plan, "
+            "n_shards=train_step.n_shards)")
+    comm_plan = old_comm_plan if old_comm_plan is not None else saved_plan
+    if comm_plan is None:
+        raise ElasticResumeError(
+            f"checkpoint in {ckpt_dir!r} carries no CommPlan, so the old "
+            f"packing layout (bucket boundaries, shard count) is unknown — "
+            f"elastic resume needs checkpoints saved with comm_plan=... "
+            f"(train loop default since the elastic layer)")
+    old_plan = comm_plan.bucket_plan(template.params)
+    old_n = comm_plan.n_shards
+
+    def bufs(prefix, n_buckets):
+        keys = [f"{prefix}|{i}" for i in range(n_buckets)]
+        missing = [k for k in keys if k not in data]
+        if missing:
+            raise ElasticResumeError(
+                f"checkpoint lacks {missing} although its CommPlan "
+                f"declares {n_buckets} buckets — payload/plan mismatch")
+        return [data[k] for k in keys]
+
+    shards = reshard_buffers(bufs("shards", old_plan.n_buckets), old_plan,
+                             old_n, new_plan, new_n_shards)
+    # momentum rides the identical layout; repack via the same round trip
+    mom_tree = full_params_from_shards(
+        [jnp.asarray(b) for b in bufs("mom", old_plan.n_buckets)],
+        old_plan, old_n)
+    mom = list(init_packed_shards(mom_tree, new_plan, new_n_shards))
+    _check_like(template.shards, shards, "shards", new_n_shards)
+    _check_like(template.mom, mom, "mom", new_n_shards)
+    params = full_params_from_shards(shards, new_plan, new_n_shards)
+    bn = (ckpt._restore("bn", template.bn_state, data)
+          if template.bn_state is not None else None)
+    return TrainState(jnp.asarray(meta["step"], jnp.int32), params,
+                      tuple(mom), bn, tuple(shards))
+
+
+def _check_like(want, got, name, n_shards):
+    want_shapes = [tuple(w.shape) for w in want]
+    got_shapes = [tuple(g.shape) for g in got]
+    if want_shapes != got_shapes:
+        raise ElasticResumeError(
+            f"resharded {name} buffers {got_shapes} do not match the "
+            f"template layout {want_shapes} (n_shards={n_shards}) — the "
+            f"new train step's bucket plan differs from the one the "
+            f"template was initialized with")
+
+
+def make_template(model, new_plan: bucketing.BucketPlan,
+                  new_n_shards: int, *, seed: int = 0, mesh=None,
+                  opt_kind: str = "lars") -> TrainState:
+    """Convenience: a freshly-initialized sharded state for the new mesh —
+    exactly what :func:`load_resharded` wants as ``template``."""
+    from repro.train.state import init_state
+    return init_state(model, seed, mesh, opt_kind=opt_kind,
+                      sharded_plan=new_plan, n_shards=new_n_shards)

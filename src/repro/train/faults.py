@@ -1,0 +1,143 @@
+"""Fault-injection harness for the elastic training loop (docs/elastic.md).
+
+Faults are declared as a compact spec string (CLI ``--inject-fault``) and
+fired by hooks the training loop calls at well-defined points:
+
+=========  =======================  =========================================
+kind       spec                     effect (fires once, at global step s)
+=========  =======================  =========================================
+kill       ``kill@s``               SIGKILL this process at the start of
+                                    step s — the un-catchable preemption; no
+                                    drain, no flush. Tests that a committed
+                                    checkpoint always survives.
+sigterm    ``sigterm@s``            SIGTERM this process at the start of
+                                    step s — the *announced* preemption
+                                    (spot/maintenance). The loop's handler
+                                    drains the in-flight step, saves, exits.
+stall      ``stall@s:secs``         Sleep ``secs`` inside step s's watchdog
+                                    window — a hung collective / slow
+                                    device. Trips the step watchdog, which
+                                    restores the last good checkpoint and
+                                    retries with backoff.
+corrupt    ``corrupt@s``            After the first checkpoint committed at
+                                    step >= s, flip bytes in its payload —
+                                    bit-rot / torn write. The manifest
+                                    checksum must reject it at load time.
+=========  =======================  =========================================
+
+Specs compose comma-separated: ``"stall@3:2.5,kill@7"``. Each fault fires
+at most once per process (the retry after a stall must not re-stall, or the
+watchdog's bounded-retry loop could never converge).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Optional, Tuple
+
+KINDS = ("kill", "sigterm", "stall", "corrupt")
+
+
+class FaultSpecError(ValueError):
+    """Unparseable ``--inject-fault`` spec."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    kind: str          # one of KINDS
+    step: int          # global step the fault is armed for
+    arg: float = 0.0   # stall seconds (stall only)
+
+
+def parse_faults(spec: Optional[str]) -> Tuple[Fault, ...]:
+    """``"stall@3:2.5,kill@7"`` -> (Fault('stall',3,2.5), Fault('kill',7)).
+    Empty/None -> ()."""
+    if not spec:
+        return ()
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            kind, _, rest = part.partition("@")
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} "
+                                 f"(known: {', '.join(KINDS)})")
+            step_s, _, arg_s = rest.partition(":")
+            step = int(step_s)
+            arg = float(arg_s) if arg_s else 0.0
+            if kind == "stall" and arg <= 0:
+                raise ValueError("stall needs a duration: stall@STEP:SECS")
+        except ValueError as e:
+            raise FaultSpecError(
+                f"bad fault spec {part!r} ({e}); expected "
+                f"kind@step[:arg], e.g. kill@7, stall@3:2.5") from e
+        out.append(Fault(kind, step, arg))
+    return tuple(out)
+
+
+class FaultInjector:
+    """Fires parsed faults from the loop's hook points. Stateless apart
+    from the fired-once set; safe to construct with an empty tuple (all
+    hooks become no-ops)."""
+
+    def __init__(self, faults: Tuple[Fault, ...] = ()):
+        self.faults = tuple(faults)
+        self._fired = set()
+
+    def _due(self, kind: str, step: int):
+        for f in self.faults:
+            if f.kind == kind and f.step <= step and f not in self._fired:
+                self._fired.add(f)
+                yield f
+
+    # ------------------------------------------------------------- hooks
+
+    def on_step(self, step: int) -> None:
+        """Called inside the watchdog window at the start of each step."""
+        for f in self._due("stall", step):
+            print(f"FAULT stall@{step}: sleeping {f.arg}s (injected slow "
+                  f"device)", flush=True)
+            time.sleep(f.arg)
+        for f in self._due("sigterm", step):
+            print(f"FAULT sigterm@{step}: simulated preemption notice",
+                  flush=True)
+            os.kill(os.getpid(), signal.SIGTERM)
+        for f in self._due("kill", step):
+            print(f"FAULT kill@{step}: SIGKILL (unannounced preemption)",
+                  flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    def on_saved(self, ckpt_path: str, step: int) -> None:
+        """Called after each checkpoint commit with the payload path."""
+        for f in self._due("corrupt", step):
+            corrupt_file(ckpt_path)
+            print(f"FAULT corrupt@{step}: flipped bytes in {ckpt_path} "
+                  f"(injected bit-rot)", flush=True)
+
+    @property
+    def any_pending(self) -> bool:
+        return any(f not in self._fired for f in self.faults)
+
+
+def corrupt_file(path: str, *, offset: Optional[int] = None,
+                 n_bytes: int = 16) -> None:
+    """Flip ``n_bytes`` bytes mid-file in place — simulates bit-rot /
+    a torn write that bypassed the atomic-rename path. The manifest
+    checksum (``checkpoint.verify``) must catch this."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise FaultSpecError(f"cannot corrupt empty file {path!r}")
+    off = size // 2 if offset is None else offset
+    off = max(0, min(off, size - 1))
+    n = min(n_bytes, size - off)
+    with open(path, "r+b") as f:
+        f.seek(off)
+        chunk = f.read(n)
+        f.seek(off)
+        f.write(bytes(b ^ 0xFF for b in chunk))
+        f.flush()
+        os.fsync(f.fileno())

@@ -1,14 +1,43 @@
 """Training loop with MLPerf-v0.5.0-style tags (the paper's Appendix 1 log
-format: run_start / train_epoch / eval_accuracy / run_stop)."""
+format: run_start / train_epoch / eval_accuracy / run_stop) and the
+elastic/fault-tolerance machinery (docs/elastic.md):
+
+* **step watchdog** (``step_timeout_s``): each step runs under a bounded
+  timeout; a hung collective / stalled device trips it, the loop restores
+  the last good checkpoint and retries with exponential backoff, up to
+  ``max_step_retries`` times. Watchdog mode disables buffer donation — the
+  in-hand state must stay valid as a restore template.
+* **SIGTERM preemption drain**: on the announced-preemption signal the loop
+  finishes the in-flight step, commits a checkpoint, and returns early —
+  the resumable exit an elastic scheduler expects.
+* **checkpoint discipline**: periodic saves are step-tagged
+  (``checkpoint.step_tag``) so retention (``keep_last_k``) has something to
+  prune, the serialized CommPlan rides along with every save, and a final
+  checkpoint is always committed at run_stop when ``ckpt_dir`` is set —
+  a run whose ``steps`` is not a multiple of ``ckpt_every`` keeps its tail.
+* **fault hooks** (``faults``): a ``train.faults.FaultInjector`` (or its
+  spec string) fires kill/sigterm/stall/corrupt at the loop's hook points.
+
+The jitted eval step and the authoritative-params gather are built once
+per ``train()`` call (not re-jitted per eval), which also keeps eval
+timing stable under the watchdog.
+"""
 from __future__ import annotations
 
+import signal
+import threading
 import time
 from typing import Callable, Optional
 
 import jax
 
 from repro.train import checkpoint as ckpt
+from repro.train.faults import FaultInjector, parse_faults
 from repro.train.state import TrainState
+
+
+class StepTimeoutError(RuntimeError):
+    """A training step exceeded the watchdog budget."""
 
 
 def mlperf_log(tag: str, value=None):
@@ -23,49 +52,185 @@ def authoritative_params(state: TrainState, train_step: Callable):
     its fp32 masters in ``state.shards``; with gather-ahead (the default)
     ``state.params`` is the forward copy, one update BEHIND the masters —
     so reconstruct the full params from the shards instead of silently
-    evaluating a stale step."""
-    if (state.shards is not None
-            and getattr(train_step, "shard_update", False)):
+    evaluating a stale step. (``train()`` uses the jit-cached
+    :func:`make_params_reader` form of this.)"""
+    return make_params_reader(train_step)(state)
+
+
+def make_params_reader(train_step: Callable) -> Callable:
+    """Build the authoritative-params reader ONCE: for sharded steps a
+    single jitted shards->params gather reused across every eval (the old
+    per-eval retrace re-staged the full unpack each time); for replicated
+    steps, plain attribute access."""
+    if getattr(train_step, "shard_update", False):
         from repro.train.state import full_params_from_shards
-        return full_params_from_shards(state.shards, train_step.bucket_plan,
-                                       train_step.n_shards)
-    return state.params
+        plan, n = train_step.bucket_plan, train_step.n_shards
+        gather = jax.jit(
+            lambda shards: full_params_from_shards(shards, plan, n))
+
+        def read(state: TrainState):
+            if state.shards is None:
+                return state.params
+            return gather(tuple(state.shards))
+        return read
+    return lambda state: state.params
+
+
+def _call_with_timeout(fn: Callable, timeout_s: float):
+    """Run ``fn`` with a bounded wall-clock budget. ``timeout_s <= 0``
+    calls inline. The worker thread is daemonic: a genuinely hung step is
+    abandoned (it cannot be killed), which is exactly the recover-by-
+    restore situation the watchdog exists for."""
+    if not timeout_s or timeout_s <= 0:
+        return fn()
+    box = {}
+
+    def worker():
+        try:
+            box["ok"] = fn()
+        except BaseException as e:  # noqa: BLE001 — re-raised on the caller
+            box["err"] = e
+
+    t = threading.Thread(target=worker, daemon=True,
+                         name="repro-step-watchdog")
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive():
+        raise StepTimeoutError(
+            f"step exceeded the {timeout_s:.1f}s watchdog budget (hung "
+            f"collective / stalled device?)")
+    if "err" in box:
+        raise box["err"]
+    return box["ok"]
 
 
 def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
           steps: int, eval_step: Optional[Callable] = None,
           eval_batch_fn: Optional[Callable] = None, eval_every: int = 0,
           log_every: int = 10, ckpt_dir: Optional[str] = None,
-          ckpt_every: int = 0, seed: int = 0):
-    """Runs ``steps`` optimizer steps. Returns (state, history)."""
+          ckpt_every: int = 0, seed: int = 0, keep_last_k: int = 0,
+          step_timeout_s: float = 0.0, max_step_retries: int = 3,
+          retry_backoff_s: float = 0.5, comm_plan=None, faults=None):
+    """Runs optimizer steps up to global step ``steps`` (a resumed state
+    continues from ``state.step``). Returns (state, history)."""
     mlperf_log("run_start")
     mlperf_log("run_set_random_seed", seed)
+    injector = (faults if isinstance(faults, FaultInjector)
+                else FaultInjector(parse_faults(faults)))
     history = []
     t0 = time.time()
-    step_fn = jax.jit(train_step, donate_argnums=(0,))
-    for i in range(steps):
-        batch = batch_fn(state.step)
-        state, metrics = step_fn(state, batch)
-        if log_every and (i % log_every == 0 or i == steps - 1):
-            m = {k: float(v) for k, v in metrics.items()}
-            history.append({"step": i, **m})
-            mlperf_log("train_step",
-                       {"step": i, "loss": round(m["loss"], 4),
-                        "lr": round(m.get("lr", 0.0), 6)})
-        if eval_every and eval_step is not None and (i + 1) % eval_every == 0:
-            mlperf_log("eval_start")
-            eb = eval_batch_fn(state.step + 100_000)
-            ep = authoritative_params(state, train_step)
-            em = {k: float(v) for k, v in
-                  jax.jit(eval_step)(ep, eb, state.bn_state).items()}
-            mlperf_log("eval_accuracy", {"step": i, **{k: round(v, 4)
-                                                       for k, v in em.items()}})
-            mlperf_log("eval_stop")
-            history.append({"step": i, **{f"eval_{k}": v
+    watchdog = bool(step_timeout_s and step_timeout_s > 0)
+    # donation frees the old state's buffers mid-step — incompatible with
+    # keeping it as the watchdog's in-memory fallback restore point
+    step_fn = (jax.jit(train_step) if watchdog
+               else jax.jit(train_step, donate_argnums=(0,)))
+    eval_fn = jax.jit(eval_step) if eval_step is not None else None
+    params_reader = make_params_reader(train_step)
+    last_saved_step = None
+
+    def save_ckpt(s: TrainState) -> None:
+        nonlocal last_saved_step
+        gstep = int(s.step)
+        path = ckpt.save(s, ckpt_dir, tag=ckpt.step_tag(gstep),
+                         comm_plan=comm_plan, keep_last_k=keep_last_k)
+        last_saved_step = gstep
+        mlperf_log("checkpoint_saved",
+                   {"step": gstep, "tag": ckpt.step_tag(gstep)})
+        injector.on_saved(path, gstep)
+
+    preempted = threading.Event()
+
+    def _on_sigterm(signum, frame):
+        preempted.set()
+        mlperf_log("sigterm_received")
+
+    old_handler = None
+    try:
+        old_handler = signal.signal(signal.SIGTERM, _on_sigterm)
+    except ValueError:      # loop driven from a non-main thread
+        pass
+
+    start = int(state.step)
+    if watchdog and ckpt_dir and not ckpt.available_tags(ckpt_dir):
+        # baseline restore point: the watchdog must always have somewhere
+        # to roll back to, even if the very first step hangs
+        save_ckpt(state)
+    i = start
+    retries = 0
+    try:
+        while i < steps:
+            batch = batch_fn(state.step)
+
+            def run_step(state=state, batch=batch, i=i):
+                injector.on_step(i)
+                s2, m = step_fn(state, batch)
+                return jax.block_until_ready((s2, m))
+
+            try:
+                state, metrics = _call_with_timeout(run_step, step_timeout_s)
+                retries = 0
+            except StepTimeoutError as e:
+                retries += 1
+                mlperf_log("watchdog_timeout",
+                           {"step": i, "attempt": retries,
+                            "timeout_s": step_timeout_s})
+                history.append({"step": i, "watchdog_timeout": retries})
+                if retries > max_step_retries:
+                    raise RuntimeError(
+                        f"step {i} timed out {retries} times "
+                        f"(budget {step_timeout_s:.1f}s each) — giving up "
+                        f"after bounded retries") from e
+                if ckpt_dir:
+                    try:
+                        state = ckpt.load(state, ckpt_dir, tag=None)
+                        i = int(state.step)
+                        mlperf_log("watchdog_restore", {"resume_step": i})
+                        history.append({"step": i, "watchdog_restore": 1})
+                    except ckpt.CheckpointError as err:
+                        print(f"watchdog: no restorable checkpoint "
+                              f"({err}); retrying with the in-memory "
+                              f"state", flush=True)
+                time.sleep(min(retry_backoff_s * 2 ** (retries - 1), 30.0))
+                continue
+            if log_every and (i % log_every == 0 or i == steps - 1):
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": i, **m})
+                mlperf_log("train_step",
+                           {"step": i, "loss": round(m["loss"], 4),
+                            "lr": round(m.get("lr", 0.0), 6)})
+            if eval_every and eval_fn is not None \
+                    and (i + 1) % eval_every == 0:
+                mlperf_log("eval_start")
+                eb = eval_batch_fn(state.step + 100_000)
+                ep = params_reader(state)
+                em = {k: float(v)
+                      for k, v in eval_fn(ep, eb, state.bn_state).items()}
+                mlperf_log("eval_accuracy",
+                           {"step": i, **{k: round(v, 4)
                                           for k, v in em.items()}})
-        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
-            ckpt.save(state, ckpt_dir)
+                mlperf_log("eval_stop")
+                history.append({"step": i, **{f"eval_{k}": v
+                                              for k, v in em.items()}})
+            i += 1
+            if ckpt_dir and ckpt_every and i % ckpt_every == 0:
+                save_ckpt(state)
+            if preempted.is_set():
+                # announced preemption: the in-flight step has drained —
+                # commit the tail and hand back a resumable state
+                mlperf_log("preempt_drain", {"step": i})
+                if ckpt_dir:
+                    save_ckpt(state)
+                break
+        if ckpt_dir and last_saved_step != int(state.step):
+            # run_stop tail: steps not a multiple of ckpt_every (or no
+            # periodic cadence at all) must still leave a final checkpoint
+            save_ckpt(state)
+    finally:
+        if old_handler is not None:
+            signal.signal(signal.SIGTERM, old_handler)
     dt = time.time() - t0
-    mlperf_log("run_stop", {"steps": steps, "wall_s": round(dt, 2)})
+    mlperf_log("run_stop", {"steps": int(state.step),
+                            "wall_s": round(dt, 2),
+                            "preempted": preempted.is_set()})
     mlperf_log("run_final")
     return state, history

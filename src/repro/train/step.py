@@ -143,6 +143,11 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     axes = tuple(mesh.axis_names)          # every axis is data-parallel
     wire = jnp.bfloat16 if comm_dtype == "bf16" else jnp.float32
     wire_bytes = 2 if comm_dtype == "bf16" else 4
+    # inside the shard_map region every axis is manual and every array is
+    # device-local, so activation sharding constraints (models.common.
+    # constrain) are both meaningless and rejected — run the forward
+    # mesh-free. Values are unchanged: constraints only place data.
+    loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=None)
 
     # ZeRO-1 sharded update (docs/comm.md): shard over the innermost
     # non-trivial mesh axis — the same rule the scatter schedules
@@ -296,6 +301,17 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     train_step.shard_axis = shard_axis
     train_step.n_shards = n_shards
     train_step.backward_profile = profile
+    # serializable CommPlan (docs/elastic.md): saved beside every
+    # checkpoint; elastic resume rebuilds the packing layout from it and
+    # re-autotunes/re-jits against the new mesh
+    from repro.comm import plan as comm_plan_mod
+    train_step.comm_plan = comm_plan_mod.make(
+        comm_cfg, plan, resolved_bucket_mb=bucket_mb,
+        mesh_axes=axes, mesh_sizes=tuple(mesh.shape[a] for a in axes),
+        shard_axis=shard_axis,
+        n_shards=n_shards if shard_update else 1, strategy=comm,
+        overlap=overlap, shard_update=shard_update,
+        gather_ahead=gather_ahead)
     return train_step
 
 

@@ -357,14 +357,14 @@ def test_checkpoint_rejects_shard_mismatch(tmp_path):
                                            shard_update=True))
     template = st.init_state(model, 0, sharded_plan=step.bucket_plan,
                              n_shards=step.n_shards)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ckpt.CheckpointMismatchError):
         ckpt.load(template, str(tmp_path))
 
     cc = CommConfig(strategy="ring", bucket_mb=0.25, shard_update=True)
     _, _, sh_state, _ = _train_sharded(cc, steps=1)
     ckpt.save(sh_state, str(tmp_path), tag="sharded")
     plain = st.init_state(model, 0)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ckpt.CheckpointMismatchError):
         ckpt.load(plain, str(tmp_path), tag="sharded")
 
 
