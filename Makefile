@@ -24,7 +24,9 @@ ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 		assert any('gather_ahead_plan' in r['name'] for r in rows), \
 		'gather-ahead smoke row missing from bench artifact'; \
 		assert any('ckpt.roundtrip' in r['name'] for r in rows), \
-		'ckpt-roundtrip smoke row missing from bench artifact'"
+		'ckpt-roundtrip smoke row missing from bench artifact'; \
+		assert any('trace.drift' in r['name'] for r in rows), \
+		'trace-drift scoreboard row missing from bench artifact'"
 
 test-tier1:      ## fast in-process subset (no 8-device subprocesses)
 	$(PY) -m pytest -x -q -m "tier1 and not tier2"

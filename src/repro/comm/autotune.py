@@ -69,6 +69,10 @@ class BackwardProfile:
     so one profiled step serves every bucket-size candidate."""
     cum_elems: Tuple[int, ...]
     cum_time_s: Tuple[float, ...]
+    #: measured forward time (forward-start probe -> backward-start marker);
+    #: None on profiles captured before the forward probe existed, in which
+    #: case ``simulate`` falls back to the t_backward/2 heuristic
+    t_forward_s: Optional[float] = None
 
     @property
     def total_s(self) -> float:
@@ -125,9 +129,12 @@ def measure_backward_profile(loss, params, *, bucket_mb: float =
 
     ``loss(params) -> scalar`` is differentiated with every fine-granularity
     bucket group's params routed through a probing identity
-    (``ddp.wrap_params_for_probe``) plus a backward-start marker on the loss
+    (``ddp.wrap_params_for_probe``), a forward-start marker on the params
+    (``ddp.mark_forward_start``), and a backward-start marker on the loss
     itself; host timestamps recorded as each group's cotangents materialize
-    yield the cumulative backward-time curve. Uses the smallest candidate
+    yield the cumulative backward-time curve, and the forward-to-backward
+    gap yields the measured ``t_forward_s`` (replacing the t_backward/2
+    heuristic in the gather-ahead pricing). Uses the smallest candidate
     bucket size so the curve resolves every coarser plan's boundaries."""
     from repro.core import ddp
     plan = bucketing.make_plan(params, bucket_mb=bucket_mb)
@@ -137,6 +144,7 @@ def measure_backward_profile(loss, params, *, bucket_mb: float =
         stamps.setdefault(int(i), time.perf_counter())
 
     def wrapped(p):
+        p = ddp.mark_forward_start(p, probe)
         p = ddp.wrap_params_for_probe(p, plan, probe)
         return ddp.mark_backward_start(loss(p), probe)
 
@@ -150,11 +158,13 @@ def measure_backward_profile(loss, params, *, bucket_mb: float =
     stamps.clear()
     jax.block_until_ready(grad_fn(params))
     jax.effects_barrier()
-    if -1 not in stamps or len(stamps) != plan.n_buckets + 1:
+    if -1 not in stamps or len(stamps) != plan.n_buckets + 2:
         raise RuntimeError(
             f"backward profile incomplete: {sorted(stamps)} of "
             f"{plan.n_buckets} groups stamped")
+    t_fwd0 = stamps.pop(-2)
     t0 = stamps.pop(-1)
+    t_forward = max(t0 - t_fwd0, 1e-9)
     # The timeline model assumes groups complete in packing order (the
     # §III-C.2 static-group premise), but a real tree's flatten order only
     # approximates it — so the i-th packing group takes the i-th order
@@ -164,7 +174,8 @@ def measure_backward_profile(loss, params, *, bucket_mb: float =
                  for i in range(plan.n_buckets))
     return BackwardProfile(tuple(int(c) for c in
                                  np.cumsum(plan.bucket_sizes)),
-                           tuple(float(t) for t in rel))
+                           tuple(float(t) for t in rel),
+                           t_forward_s=float(t_forward))
 
 
 def backward_flops_per_param(family: Optional[str] = None) -> float:
@@ -206,8 +217,11 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
     shards, and the param all-gather (``param_dtype_bytes`` per element —
     bf16 by default) is priced per ``gather_ahead``: True (default) issues
     it at the start of the next step's forward, so it hides up to
-    ``t_forward_s`` (default backward/2) and only the overhang is charged;
-    False issues it at step end, fully exposed."""
+    ``t_forward_s`` and only the overhang is charged; False issues it at
+    step end, fully exposed. The forward budget resolves in order: explicit
+    ``t_forward_s`` > the profile's measured ``t_forward_s`` (rescaled the
+    same way the backward curve is, so an explicit ``t_backward_s``
+    override stays proportional) > the t_backward/2 heuristic."""
     bt = backward_times(plan, t_backward_s, profile)
     ready = np.cumsum(bt)
     free = 0.0
@@ -232,8 +246,14 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
                                     links=links).time_s
             for s in plan.bucket_sizes)
         if gather_ahead:
-            t_fwd = (0.5 * t_backward_s if t_forward_s is None
-                     else t_forward_s)
+            if t_forward_s is not None:
+                t_fwd = t_forward_s
+            elif (profile is not None and profile.t_forward_s is not None
+                  and profile.total_s > 0):
+                t_fwd = profile.t_forward_s * (t_backward_s
+                                               / profile.total_s)
+            else:
+                t_fwd = 0.5 * t_backward_s
             exposed += max(0.0, t_gather - t_fwd)
             mode = "shard_update+gather_ahead"
         else:

@@ -33,18 +33,21 @@ import jax.numpy as jnp
 from repro.core import bucketing
 from repro.core.compat import axes_size
 from repro.core.precision import grads_to_comm, grads_to_master
+from repro.obs import trace as obs_trace
 
 
 def allreduce_grads(grads, *, strategy: str, axes: Sequence[str],
                     plan: "bucketing.BucketPlan" = None,
                     comm_dtype=jnp.bfloat16, use_kernel: bool = False,
-                    interpret: bool = None):
+                    interpret: bool = None, tracer=None):
     """Reduce-mean gradients over the data-parallel mesh axes.
     Must be called inside shard_map. Returns fp32 gradients.
 
     ``comm_dtype`` is the wire dtype (paper §IV: bf16; f32 reproduces the
     full-precision baseline); ``use_kernel`` swaps the ring schedules' inner
-    fold for the Pallas ring-step kernel."""
+    fold for the Pallas ring-step kernel. ``tracer`` (``obs.trace.Tracer``)
+    plants one ``ar[bi]`` span probe per bucket — begin when the packed
+    buffer exists, end when the reduced buffer does."""
     n = axes_size(axes)
 
     if strategy == "naive":
@@ -58,18 +61,26 @@ def allreduce_grads(grads, *, strategy: str, axes: Sequence[str],
     bufs = bucketing.pack(grads, plan, dtype=comm_dtype)
     # one collective per static bucket group, in backward-completion
     # order; payload is the paper's "several megabytes"
-    bufs = [schedule(b, tuple(axes), use_kernel=use_kernel,
-                     interpret=interpret) for b in bufs]
-    red = bucketing.unpack(bufs, plan, dtype=jnp.float32)
+    out = []
+    for b, buf in enumerate(bufs):
+        obs_trace.mark(tracer, f"ar[b{b}]", "B", [buf], bucket=b)
+        red = schedule(buf, tuple(axes), use_kernel=use_kernel,
+                       interpret=interpret)
+        obs_trace.mark(tracer, f"ar[b{b}]", "E", [red], bucket=b)
+        out.append(red)
+    red = bucketing.unpack(out, plan, dtype=jnp.float32)
     return jax.tree.map(lambda g: g / n, red)
 
 
-def _overlap_bucket_fn(slots, schedule, axes, comm_dtype, use_kernel,
-                       interpret):
+def _overlap_bucket_fn(gi, slots, schedule, axes, comm_dtype, use_kernel,
+                       interpret, tracer=None):
     """custom_vjp identity over one bucket group's param leaves whose
     backward rule packs the group's cotangents, runs the collective, and
     returns the reduced-mean fp32 gradients — so the collective sits inside
-    the backward graph, data-dependent only on this group's grads."""
+    the backward graph, data-dependent only on this group's grads. With a
+    ``tracer``, the group-boundary hook doubles as the ``ar[b<gi>]`` span:
+    begin on the cotangents (grads ready = collective issue), end on the
+    reduced buffer."""
     @jax.custom_vjp
     def bucket_identity(leaves):
         return leaves
@@ -78,8 +89,10 @@ def _overlap_bucket_fn(slots, schedule, axes, comm_dtype, use_kernel,
         return leaves, None
 
     def bwd(_, gs):
+        obs_trace.mark(tracer, f"ar[b{gi}]", "B", gs, bucket=gi)
         buf = bucketing.pack_group(gs, slots, dtype=comm_dtype)
         buf = schedule(buf, axes, use_kernel=use_kernel, interpret=interpret)
+        obs_trace.mark(tracer, f"ar[b{gi}]", "E", [buf], bucket=gi)
         n = axes_size(axes)
         outs = bucketing.unpack_group(buf, slots, dtype=jnp.float32)
         return (tuple(o / n for o in outs),)
@@ -114,14 +127,17 @@ def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn,
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
-def _shard_bucket_fn(slots, rs, axes, comm_dtype, use_kernel, interpret):
+def _shard_bucket_fn(gi, slots, rs, axes, comm_dtype, use_kernel, interpret,
+                     tracer=None):
     """custom_vjp identity over one bucket group's ``(leaves, sink)`` whose
     backward rule packs the group's cotangents, runs the schedule's
     REDUCE-SCATTER-terminal form, and emits the reduced-mean fp32 local
     shard as the cotangent of the zero-valued ``sink`` (the flax
     ``perturb`` idiom: side outputs of the backward ride on auxiliary
     inputs). The leaves' own cotangents are zeros — the sharded path never
-    materializes a full reduced gradient."""
+    materializes a full reduced gradient. With a ``tracer``, the sink fire
+    is the ``rs[b<gi>]`` span: begin on the cotangents, end on the reduced
+    shard."""
     @jax.custom_vjp
     def bucket_identity(leaves, sink):
         del sink
@@ -132,10 +148,12 @@ def _shard_bucket_fn(slots, rs, axes, comm_dtype, use_kernel, interpret):
         return leaves, None
 
     def bwd(_, gs):
+        obs_trace.mark(tracer, f"rs[b{gi}]", "B", gs, bucket=gi)
         buf = bucketing.pack_group(gs, slots, dtype=comm_dtype)
         shard = rs(buf, axes, use_kernel=use_kernel, interpret=interpret)
         n = axes_size(axes)
         shard = grads_to_master(shard) / n
+        obs_trace.mark(tracer, f"rs[b{gi}]", "E", [shard], bucket=gi)
         zeros = tuple(jnp.zeros(g.shape, g.dtype) for g in gs)
         return (zeros, shard)
 
@@ -156,7 +174,8 @@ def make_shard_sinks(plan: "bucketing.BucketPlan", n_shards: int):
 def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
                             strategy: str, axes: Sequence[str],
                             comm_dtype=jnp.bfloat16, use_kernel: bool = False,
-                            interpret: bool = None, shard_sinks=None):
+                            interpret: bool = None, shard_sinks=None,
+                            tracer=None):
     """Overlap-aware bucket scheduling (paper §III-C.2).
 
     Rebuilds ``params`` with each bucket group's leaves routed through an
@@ -183,17 +202,17 @@ def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
         rs = get_reduce_scatter(strategy)
         return _wrap_param_groups(
             params, plan,
-            lambda gi, group: _shard_bucket_fn(group, rs, tuple(axes),
+            lambda gi, group: _shard_bucket_fn(gi, group, rs, tuple(axes),
                                                comm_dtype, use_kernel,
-                                               interpret),
+                                               interpret, tracer),
             extras=shard_sinks)
     from repro.comm import get_schedule
     schedule = get_schedule(strategy)
     return _wrap_param_groups(
         params, plan,
-        lambda gi, group: _overlap_bucket_fn(group, schedule, tuple(axes),
-                                             comm_dtype, use_kernel,
-                                             interpret))
+        lambda gi, group: _overlap_bucket_fn(gi, group, schedule,
+                                             tuple(axes), comm_dtype,
+                                             use_kernel, interpret, tracer))
 
 
 # --------------------------------------------------------------------------
@@ -202,7 +221,7 @@ def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
 def reduce_scatter_grads(grads, *, strategy: str, axes: Sequence[str],
                          plan: "bucketing.BucketPlan",
                          comm_dtype=jnp.bfloat16, use_kernel: bool = False,
-                         interpret: bool = None):
+                         interpret: bool = None, tracer=None):
     """POST-backward scatter (the ``CommConfig.overlap=False`` sharded
     path; with overlap on, ``wrap_params_for_overlap(shard_sinks=...)``
     issues the same reduce-scatters from inside the backward instead):
@@ -215,29 +234,41 @@ def reduce_scatter_grads(grads, *, strategy: str, axes: Sequence[str],
     rs = get_reduce_scatter(strategy)
     n = axes_size(axes)
     bufs = bucketing.pack(grads, plan, dtype=comm_dtype)
-    return [grads_to_master(rs(b, tuple(axes), use_kernel=use_kernel,
-                               interpret=interpret)) / n for b in bufs]
+    shards = []
+    for b, buf in enumerate(bufs):
+        obs_trace.mark(tracer, f"rs[b{b}]", "B", [buf], bucket=b)
+        shard = grads_to_master(rs(buf, tuple(axes), use_kernel=use_kernel,
+                                   interpret=interpret)) / n
+        obs_trace.mark(tracer, f"rs[b{b}]", "E", [shard], bucket=b)
+        shards.append(shard)
+    return shards
 
 
 def all_gather_params(param_shards, plan: "bucketing.BucketPlan", *,
-                      shard_axis: str, wire_dtype=jnp.bfloat16):
+                      shard_axis: str, wire_dtype=jnp.bfloat16,
+                      tracer=None):
     """Gather phase: cast each fp32 master shard to the wire dtype once
     (bf16 by default — half the bytes of the fp32 grad all-gather the
     replicated path pays), ring all-gather along the shard axis, and unpack
     into the full param pytree. One independent collective per bucket, so
     a latency-hiding scheduler can slide each gather under surrounding
-    compute. Must be called inside shard_map."""
+    compute. Must be called inside shard_map. ``tracer`` plants the
+    ``ag[bi]`` span per bucket: begin at the gather issue (wire copy
+    ready), end when the gathered buffer exists."""
     from repro.comm import primitives as prim
     bufs = []
     for b, shard in enumerate(param_shards):
         wire = grads_to_comm(shard, dtype=wire_dtype)
-        bufs.append(prim.ring_all_gather(wire, shard_axis,
-                                         plan.bucket_sizes[b]))
+        obs_trace.mark(tracer, f"ag[b{b}]", "B", [wire], bucket=b)
+        buf = prim.ring_all_gather(wire, shard_axis, plan.bucket_sizes[b])
+        obs_trace.mark(tracer, f"ag[b{b}]", "E", [buf], bucket=b)
+        bufs.append(buf)
     return bucketing.unpack(bufs, plan, dtype=jnp.float32)
 
 
 def gather_ahead_params(shards, plan: "bucketing.BucketPlan", *,
-                        shard_axis: str, wire_dtype=jnp.bfloat16):
+                        shard_axis: str, wire_dtype=jnp.bfloat16,
+                        tracer=None):
     """Gather-AHEAD: rebuild this step's forward params from the persistent
     master shards (``train.state.TrainState.shards``, updated by the
     previous step) at the START of the step. Each bucket's all-gather is an
@@ -252,7 +283,7 @@ def gather_ahead_params(shards, plan: "bucketing.BucketPlan", *,
     point (step start, from the persistent shards) differs. Must be called
     inside shard_map with the shards' local view."""
     return all_gather_params(shards, plan, shard_axis=shard_axis,
-                             wire_dtype=wire_dtype)
+                             wire_dtype=wire_dtype, tracer=tracer)
 
 
 # --------------------------------------------------------------------------
@@ -306,3 +337,19 @@ def mark_backward_start(loss, probe, idx: int = -1):
 
     ident.defvjp(fwd, bwd)
     return ident(loss)
+
+
+def mark_forward_start(params, probe, idx: int = -2):
+    """Identity on the param pytree whose primal stamps ``probe(idx)`` when
+    the first parameter leaf materializes — i.e. at program start, which on
+    a compute-ordered backend is the start of the forward pass. Pairs with
+    :func:`mark_backward_start`: the gap between the two stamps is the
+    measured ``t_forward`` ``comm.autotune.measure_backward_profile``
+    records (replacing the old t_backward/2 heuristic)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        return params
+    first = leaves[0]
+    dep = (first.reshape(-1)[0] * 0).astype(jnp.int32)
+    jax.debug.callback(probe, jnp.int32(idx) + dep)
+    return params

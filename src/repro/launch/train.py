@@ -5,6 +5,12 @@ Examples:
       --reduced --seq 128 --batch 8 --steps 100 --optimizer lars --lr 1.0
   PYTHONPATH=src python -m repro.launch.train --arch resnet50 --reduced \\
       --batch 32 --steps 200 --comm bucketed --warmup 20
+
+Observability (docs/observability.md): ``--metrics out.jsonl`` mirrors the
+tag stream to a JSONL artifact; ``--trace out.json`` attaches a step-
+timeline tracer to the explicit-DDP paths and writes a Chrome-trace JSON
+(chrome://tracing / Perfetto) at exit, plus ``obs.drift.*`` rows scoring
+the traced bucket comm spans against the CommPlan's predicted timeline.
 """
 from __future__ import annotations
 
@@ -21,9 +27,13 @@ from repro.core.schedule import ScheduleConfig, linear_scaled_lr, \
 from repro.data.synthetic import make_batch_fn
 from repro.launch.mesh import make_local_mesh
 from repro.models.registry import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train import loop
 from repro.train.state import init_state
 from repro.train.step import make_eval_step, make_train_step
+
+WHERE = "repro/launch/train.py"
 
 
 def main(argv=None):
@@ -97,8 +107,30 @@ def main(argv=None):
                          "sigterm@5, stall@3:2.5, corrupt@4")
     ap.add_argument("--data", default="lcg", choices=["lcg", "uniform"])
     ap.add_argument("--history-out", default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="attach the step-timeline tracer and write a "
+                         "Chrome-trace JSON (chrome://tracing / Perfetto) "
+                         "at exit; also scores traced bucket comm spans "
+                         "against the CommPlan prediction (obs.drift.*)")
+    ap.add_argument("--metrics", default=None, metavar="OUT.jsonl",
+                    help="mirror every metrics event (the MLPerf tag "
+                         "stream + obs.* rows) to a JSONL file")
     args = ap.parse_args(argv)
 
+    reg = obs_metrics.default_registry()
+    sink = (reg.add_sink(obs_metrics.JsonlSink(args.metrics))
+            if args.metrics else None)
+    tracer = obs_trace.Tracer() if args.trace else None
+    try:
+        return _run(args, reg=reg, tracer=tracer)
+    finally:
+        if sink is not None:
+            reg.remove_sink(sink)
+            sink.close()
+
+
+def _run(args, *, reg: obs_metrics.Registry,
+         tracer: "obs_trace.Tracer | None"):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -123,9 +155,10 @@ def main(argv=None):
             f"(--comm {{bucketed,psum,ring,hierarchical,2d_torus,dbtree}}), "
             f"not {args.comm!r} — it would silently train replicated")
     if args.backward_profile == "measured" and args.bucket_mb != "auto":
-        print("note: --backward-profile measured only affects the bucket "
-              "autotuner; add --bucket-mb auto or the profile is unused",
-              flush=True)
+        reg.event("launch_note",
+                  "--backward-profile measured only affects the bucket "
+                  "autotuner; add --bucket-mb auto or the profile is unused",
+                  where=WHERE)
     comm_cfg = CommConfig(strategy=args.comm, bucket_mb=args.bucket_mb,
                           overlap=not args.no_overlap,
                           shard_update=args.shard_update,
@@ -147,32 +180,36 @@ def main(argv=None):
             # bucket_mb='auto' re-autotunes below against THIS mesh when
             # make_train_step re-jits
             comm_cfg = saved_plan.comm_config(reautotune=True)
-            print(
+            reg.event(
+                "elastic_resume_plan",
                 f"resuming elastically from {args.ckpt_dir}: CommPlan "
                 f"schedule={saved_plan.schedule} "
                 f"bucket={saved_plan.bucket_mb:g}MB "
                 f"(requested {saved_plan.requested_bucket_mb!r}), saved "
                 f"on mesh "
                 f"{dict(zip(saved_plan.mesh_axes, saved_plan.mesh_sizes))} "
-                f"with n_shards={saved_plan.n_shards}", flush=True)
+                f"with n_shards={saved_plan.n_shards}", where=WHERE)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
                                  mesh=mesh, comm=comm_cfg,
                                  grad_accum=args.grad_accum,
                                  profile_batch=(batch_fn(0) if
                                                 args.backward_profile ==
-                                                "measured" else None))
+                                                "measured" else None),
+                                 tracer=tracer)
     if getattr(train_step, "tuned", None) is not None:
         t = train_step.tuned
-        print(f"autotuned bucket plan: {t.bucket_mb:g}MB x "
-              f"{t.n_buckets} buckets ({t.sim.mode}), predicted overlap "
-              f"eff {t.sim.overlap_eff:.2f}", flush=True)
+        reg.event("autotune_plan",
+                  f"autotuned bucket plan: {t.bucket_mb:g}MB x "
+                  f"{t.n_buckets} buckets ({t.sim.mode}), predicted overlap "
+                  f"eff {t.sim.overlap_eff:.2f}", where=WHERE)
     if getattr(train_step, "shard_update", False):
         rs_at = "in-backward" if train_step.overlap else "post-backward"
         ag_at = ("gather-ahead (hidden under next forward)"
                  if train_step.gather_ahead else "step-end")
-        print(f"ZeRO-1 sharded update: {train_step.n_shards} shards over "
-              f"'{train_step.shard_axis}', {rs_at} reduce-scatter, "
-              f"{ag_at} param all-gather", flush=True)
+        reg.event("shard_update_plan",
+                  f"ZeRO-1 sharded update: {train_step.n_shards} shards "
+                  f"over '{train_step.shard_axis}', {rs_at} reduce-scatter, "
+                  f"{ag_at} param all-gather", where=WHERE)
     eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
 
     sharded = getattr(train_step, "shard_update", False)
@@ -187,8 +224,9 @@ def main(argv=None):
             args.ckpt_dir, state, getattr(train_step, "bucket_plan", None),
             new_n, old_comm_plan=saved_plan)
         old_n = saved_plan.n_shards if saved_plan is not None else 1
-        print(f"elastic resume: restored step {int(state.step)}, "
-              f"resharded {old_n} -> {new_n} shards", flush=True)
+        reg.event("elastic_resume",
+                  f"elastic resume: restored step {int(state.step)}, "
+                  f"resharded {old_n} -> {new_n} shards", where=WHERE)
     from repro.train.faults import FaultInjector, parse_faults
     state, history = loop.train(
         state, train_step, batch_fn, steps=args.steps, eval_step=eval_step,
@@ -197,7 +235,25 @@ def main(argv=None):
         keep_last_k=args.keep_last_k, step_timeout_s=args.step_timeout_s,
         max_step_retries=args.max_step_retries,
         comm_plan=getattr(train_step, "comm_plan", None),
-        faults=FaultInjector(parse_faults(args.inject_fault)))
+        faults=FaultInjector(parse_faults(args.inject_fault)),
+        tracer=tracer)
+    if tracer is not None:
+        path = obs_trace.export_chrome(tracer, args.trace)
+        reg.event("trace_written",
+                  {"path": path, "steps": len(tracer.steps),
+                   "spans": len(tracer.spans())}, where=WHERE)
+        comm_plan = getattr(train_step, "comm_plan", None)
+        if comm_plan is not None:
+            from repro.obs import drift as obs_drift
+            drifts = obs_drift.compute(tracer, comm_plan)
+            if drifts:
+                obs_drift.emit(drifts, comm_plan, registry=reg)
+            else:
+                reg.event("obs.drift.no_spans",
+                          {"schedule": comm_plan.schedule,
+                           "note": "no traced bucket comm spans to score "
+                                   "(xla path, or zero completed steps)"},
+                          where=WHERE)
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)

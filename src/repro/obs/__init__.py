@@ -1,0 +1,15 @@
+"""Observability layer (docs/observability.md).
+
+* ``obs.metrics`` — typed counter/gauge/event registry with pluggable
+  sinks (stdout in the MLPerf-v0.5.0 tag format, JSONL file, in-memory);
+  the structured replacement for the loop's ad-hoc ``print`` logging.
+* ``obs.trace``   — host-timestamped step-timeline tracer: per-bucket
+  comm spans planted via ``jax.debug.callback`` probes at the ddp hooks,
+  Chrome-trace (chrome://tracing / Perfetto) JSON export.
+* ``obs.drift``   — predicted-vs-measured drift monitor: traced bucket
+  spans scored against the CommPlan's ``comm/cost.py`` timeline, emitted
+  as ``obs.drift.*`` metric rows and the ``trace.drift_*`` CI bench rows.
+"""
+from repro.obs.metrics import (JsonlSink, MemorySink, Registry,  # noqa: F401
+                               StdoutSink, default_registry)
+from repro.obs.trace import Span, Tracer  # noqa: F401

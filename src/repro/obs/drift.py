@@ -1,0 +1,155 @@
+"""Predicted-vs-measured drift monitor (docs/observability.md).
+
+The comm layer *predicts* every bucket collective's wall time
+(``comm/cost.py`` alpha-beta models — what the autotuner and the
+``report`` accounting tables are built on) and, with a :class:`~repro.obs
+.trace.Tracer` attached, *measures* the same spans per step. This module
+closes the loop: for each traced bucket span (``rs[bi]``/``ar[bi]``/
+``ag[bi]``) it looks up the ``CommPlan``'s predicted duration and scores
+the relative error — per bucket and aggregated per schedule — then emits
+the result as ``obs.drift.*`` metric rows and the ``trace.drift_*``
+bench-smoke rows CI asserts per PR. When the cost model rots (a schedule
+changes but its model doesn't, a new mesh class lands unpriced), the
+drift trajectory moves and the scoreboard shows it.
+
+Semantics of the number: ``rel_err = measured/predicted - 1`` per span;
+the per-schedule aggregate is ``sum(measured)/sum(predicted) - 1`` over
+the bucket comm spans (volume-weighted, so one tiny-bucket outlier can't
+dominate). On real TPU links measured and predicted share a topology and
+the target is |rel_err| small; on the host-CPU CI mesh the prediction
+still uses the v5e link constants, so the row is a *trend* (tracked per
+PR by the bench artifact), not an accuracy claim — see
+docs/observability.md §Drift rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.comm import cost
+from repro.comm.plan import CommPlan
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import Span, Tracer
+
+#: span-name prefixes the monitor scores (the bucket comm spans)
+COMM_KINDS = ("rs", "ar", "ag")
+
+
+@dataclasses.dataclass(frozen=True)
+class Drift:
+    """One span's predicted-vs-measured comparison."""
+    name: str                # span name, e.g. 'rs[b0]'
+    kind: str                # 'rs' | 'ar' | 'ag'
+    predicted_s: float
+    measured_s: float
+
+    @property
+    def rel_err(self) -> float:
+        if self.predicted_s <= 0:
+            return float("inf") if self.measured_s > 0 else 0.0
+        return self.measured_s / self.predicted_s - 1.0
+
+
+def predicted_span_times(plan: CommPlan, *,
+                         links: Optional[Dict[str, cost.Link]] = None
+                         ) -> Dict[str, float]:
+    """The CommPlan's predicted per-bucket comm-span durations, keyed by
+    the tracer's span names. Sharded plans predict the RS-terminal form
+    per bucket plus the param all-gather (``ag[bi]``, param bytes on the
+    wire dtype); replicated plans predict the full all-reduce
+    (``ar[bi]``). Exactly the spans ``core/ddp.py`` plants."""
+    out: Dict[str, float] = {}
+    axes, sizes = plan.mesh_axes, plan.mesh_sizes
+    for b, elems in enumerate(plan.bucket_sizes):
+        payload = elems * plan.wire_dtype_bytes
+        if plan.shard_update:
+            out[f"rs[b{b}]"] = cost.predict_reduce_scatter(
+                plan.schedule, axes, sizes, payload, links=links).time_s
+            out[f"ag[b{b}]"] = cost.predict_all_gather(
+                axes, sizes, payload, links=links).time_s
+        else:
+            out[f"ar[b{b}]"] = cost.predict(
+                plan.schedule, axes, sizes, payload, links=links).time_s
+    return out
+
+
+def span_kind(name: str) -> Optional[str]:
+    for k in COMM_KINDS:
+        if name.startswith(f"{k}["):
+            return k
+    return None
+
+
+def measured_span_times(source, *, skip_steps: int = 1
+                        ) -> Dict[str, float]:
+    """Median measured duration per span name across the traced steps.
+    ``source`` is a :class:`Tracer`, an iterable of :class:`Span`, or an
+    already-reduced ``{span_name: seconds}`` dict (the cross-process form
+    the bench harness ships over a pipe). ``skip_steps`` drops the first
+    traced steps (compile + warm-up — their timings measure XLA, not the
+    timeline)."""
+    if isinstance(source, dict):
+        return {n: float(s) for n, s in sorted(source.items())
+                if span_kind(n) is not None}
+    if isinstance(source, Tracer):
+        spans: Iterable[Span] = source.spans()
+    else:
+        spans = tuple(source)
+    steps = sorted({s.step for s in spans if s.step >= 0})
+    keep = set(steps[skip_steps:]) if len(steps) > skip_steps else set(steps)
+    by_name: Dict[str, list] = {}
+    for s in spans:
+        if s.step in keep and span_kind(s.name) is not None:
+            by_name.setdefault(s.name, []).append(s.dur_s)
+    return {n: float(np.median(ds)) for n, ds in sorted(by_name.items())}
+
+
+def compute(source, plan: CommPlan, *,
+            links: Optional[Dict[str, cost.Link]] = None,
+            skip_steps: int = 1) -> Tuple[Drift, ...]:
+    """Score every traced bucket comm span against the plan's prediction.
+    Spans the plan doesn't predict (or predicted spans never traced —
+    e.g. ``ag`` with gather-ahead off and zero steps) are skipped, not
+    errors: the CI assertion is on the aggregate row's presence."""
+    predicted = predicted_span_times(plan, links=links)
+    measured = measured_span_times(source, skip_steps=skip_steps)
+    out = []
+    for name, meas in measured.items():
+        if name in predicted:
+            out.append(Drift(name=name, kind=span_kind(name),
+                             predicted_s=predicted[name], measured_s=meas))
+    return tuple(out)
+
+
+def aggregate(drifts: Iterable[Drift]) -> float:
+    """Volume-weighted per-schedule relative error:
+    ``sum(measured)/sum(predicted) - 1`` over the bucket comm spans."""
+    drifts = tuple(drifts)
+    pred = sum(d.predicted_s for d in drifts)
+    meas = sum(d.measured_s for d in drifts)
+    if pred <= 0:
+        return float("inf") if meas > 0 else 0.0
+    return meas / pred - 1.0
+
+
+def emit(drifts: Iterable[Drift], plan: CommPlan, *,
+         registry: Optional[obs_metrics.Registry] = None) -> float:
+    """Publish the drift rows: one ``obs.drift.span`` event per scored
+    span and one ``obs.drift.<schedule>.rel_err`` gauge with the
+    aggregate. Returns the aggregate."""
+    reg = registry or obs_metrics.default_registry()
+    where = "repro/obs/drift.py"
+    drifts = tuple(drifts)
+    for d in drifts:
+        reg.event("obs.drift.span",
+                  {"span": d.name, "kind": d.kind,
+                   "predicted_us": round(d.predicted_s * 1e6, 3),
+                   "measured_us": round(d.measured_s * 1e6, 3),
+                   "rel_err": round(d.rel_err, 4),
+                   "schedule": plan.schedule}, where=where)
+    agg = aggregate(drifts)
+    reg.gauge(f"obs.drift.{plan.schedule}.rel_err", round(agg, 4),
+              where=where)
+    return agg

@@ -1,0 +1,270 @@
+"""Step-timeline tracer: host-timestamped spans from inside the jitted step.
+
+Generalizes ``comm.autotune.measure_backward_profile``'s probe idiom
+(``jax.debug.callback`` tied to a data dependency, so the host callback
+fires when — and only when — the depended-on arrays materialize) into
+reusable span instrumentation:
+
+* :func:`mark` plants one begin/end phase probe; the ddp hooks
+  (``wrap_params_for_overlap`` group boundaries, the reduce-scatter sink
+  fire, the gather-ahead all-gathers, ``reduce_scatter_grads``,
+  ``allreduce_grads``) and the train step (forward/backward/update
+  windows) call it with ``tracer=None`` as a zero-cost no-op, so an
+  untraced step's graph is unchanged.
+* :class:`Tracer` collects the fired probes. The training loop owns the
+  step windows: ``begin_step()`` before dispatch, ``end_step(step)``
+  after ``block_until_ready`` — which drains the async callbacks
+  (``jax.effects_barrier``) and folds that window's events into
+  :class:`Span` records. Inside ``shard_map`` every device fires each
+  probe once; a span is assembled as [min(begin), max(end)] across
+  devices, i.e. the wall-clock window the operation occupied anywhere on
+  the mesh.
+* Host-side happenings outside the jitted step — checkpoint commits,
+  watchdog timeouts/restores, preemption — are recorded directly with
+  ``host_span``/``instant`` (the elastic layer's hook points).
+
+Export: :func:`chrome_trace` / :func:`export_chrome` produce the Chrome
+Trace Event JSON (``chrome://tracing`` / Perfetto, ``ph: "X"`` complete
+events, microsecond timestamps); :func:`spans_from_chrome` reads it back
+for ``launch.report --section trace`` and ``tools/trace_summary.py``.
+The span taxonomy (names, cats) is catalogued in docs/observability.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: span category -> Chrome-trace tid (one named row per category)
+CATEGORY_TIDS = {"step": 0, "compute": 1, "comm": 2, "host": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One assembled timeline span. Times are ``time.perf_counter``
+    seconds; ``step=-1`` marks host events outside any step window."""
+    name: str
+    cat: str                 # 'step' | 'compute' | 'comm' | 'host'
+    t0: float
+    t1: float
+    step: int = -1
+    args: Tuple[Tuple[str, object], ...] = ()
+
+    @property
+    def dur_s(self) -> float:
+        return self.t1 - self.t0
+
+    def arg(self, key: str, default=None):
+        return dict(self.args).get(key, default)
+
+
+class Tracer:
+    """Collects probe firings and assembles them into per-step spans.
+
+    Thread-safe: probes fire from the runtime's callback threads and the
+    watchdog's worker thread; ``begin_step``/``end_step`` bracket one
+    step's dispatch. Events fired outside an open window (e.g. a stale
+    callback from an abandoned hung step) are dropped at the next
+    ``begin_step`` — a watchdog-restored step never inherits spans."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._pending: List[Tuple[str, str, str, float, tuple]] = []
+        #: (step, spans) per traced step, in completion order
+        self.steps: List[Tuple[int, Tuple[Span, ...]]] = []
+        #: host-side spans/instants outside the step windows
+        self.extra: List[Span] = []
+
+    # ---------------------------------------------------- device-side API
+
+    def callback(self, name: str, *, cat: str = "comm", phase: str = "B",
+                 **args):
+        """Host callback for ``jax.debug.callback``: stamps the wall clock
+        the moment the probe's data dependency materializes."""
+        items = tuple(sorted(args.items()))
+
+        def cb(_tok=None):
+            with self._lock:
+                self._pending.append((name, cat, phase, self._clock(),
+                                      items))
+        return cb
+
+    # ------------------------------------------------------ step windows
+
+    def begin_step(self) -> None:
+        with self._lock:
+            self._pending.clear()
+            self._pending.append(("step", "step", "B", self._clock(), ()))
+
+    def end_step(self, step: int) -> None:
+        """Close the window: drain the async probe callbacks, fold the
+        window's events into spans, file them under ``step``."""
+        import jax
+        jax.effects_barrier()
+        with self._lock:
+            self._pending.append(("step", "step", "E", self._clock(), ()))
+            evs, self._pending = self._pending, []
+        self.steps.append((int(step), _assemble(evs, int(step))))
+
+    def abort_step(self) -> None:
+        """Discard the open window (watchdog timeout: the step's probes
+        are meaningless and may still trickle in from the hung program)."""
+        with self._lock:
+            self._pending.clear()
+
+    # --------------------------------------------------------- host-side
+
+    def instant(self, name: str, *, cat: str = "host",
+                step: Optional[int] = None, **args) -> None:
+        """Zero-duration host event (watchdog timeout/restore, preemption,
+        fault injection) — rendered as a tick on the host row."""
+        t = self._clock()
+        self.extra.append(Span(name, cat, t, t,
+                               -1 if step is None else int(step),
+                               tuple(sorted(args.items()))))
+
+    @contextlib.contextmanager
+    def host_span(self, name: str, *, cat: str = "host",
+                  step: Optional[int] = None, **args):
+        """Wall-clock span around host work (checkpoint commit)."""
+        t0 = self._clock()
+        try:
+            yield
+        finally:
+            self.extra.append(Span(name, cat, t0, self._clock(),
+                                   -1 if step is None else int(step),
+                                   tuple(sorted(args.items()))))
+
+    # ----------------------------------------------------------- queries
+
+    def spans(self, step: Optional[int] = None) -> Tuple[Span, ...]:
+        """All assembled spans (steps + extra), optionally one step's."""
+        out: List[Span] = []
+        for s, spans in self.steps:
+            if step is None or s == step:
+                out.extend(spans)
+        out.extend(e for e in self.extra
+                   if step is None or e.step == step)
+        return tuple(sorted(out, key=lambda sp: (sp.t0, sp.name)))
+
+
+def _assemble(evs, step: int) -> Tuple[Span, ...]:
+    """Events -> spans: per (name, cat), [min(B), max(E)] across devices.
+    A name with only begins (or only ends) still yields a degenerate span
+    rather than dropping silently — visible in the trace as zero-width."""
+    groups: Dict[Tuple[str, str], Dict[str, list]] = {}
+    for name, cat, phase, t, args in evs:
+        g = groups.setdefault((name, cat), {"B": [], "E": [], "args": args})
+        g[phase].append(t)
+        if args:
+            g["args"] = args
+    spans = []
+    for (name, cat), g in groups.items():
+        t0 = min(g["B"]) if g["B"] else min(g["E"])
+        t1 = max(g["E"]) if g["E"] else max(g["B"])
+        spans.append(Span(name, cat, t0, max(t0, t1), step, g["args"]))
+    return tuple(sorted(spans, key=lambda sp: (sp.t0, sp.name)))
+
+
+# --------------------------------------------------------------- probes
+
+def mark(tracer: Optional[Tracer], name: str, phase: str, deps: Sequence,
+         *, cat: str = "comm", **args) -> None:
+    """Plant one phase probe inside a traced (jitted) function: a
+    ``jax.debug.callback`` whose only dependency is a zero token derived
+    from ``deps``, so it fires when those arrays materialize. No-op when
+    ``tracer`` is None — the untraced graph is byte-identical."""
+    if tracer is None:
+        return
+    import jax
+    import jax.numpy as jnp
+    tok = jnp.int32(0)
+    for d in deps:
+        if getattr(d, "size", 0):
+            tok = tok + (jnp.reshape(d, (-1,))[0] * 0).astype(jnp.int32)
+    jax.debug.callback(tracer.callback(name, cat=cat, phase=phase, **args),
+                       tok)
+
+
+def span_deps(tracer: Optional[Tracer], name: str, begin_deps, end_deps,
+              *, cat: str = "comm", **args) -> None:
+    """Begin + end probes in one call (both phases share name/cat/args)."""
+    mark(tracer, name, "B", begin_deps, cat=cat, **args)
+    mark(tracer, name, "E", end_deps, cat=cat, **args)
+
+
+# ------------------------------------------------------- Chrome export
+
+def chrome_trace(tracer: Tracer) -> dict:
+    """Chrome Trace Event Format object: one ``ph:"X"`` complete event per
+    span (microseconds), per-category named rows via thread_name metadata.
+    Loadable by chrome://tracing and Perfetto as-is."""
+    events = []
+    for cat, tid in sorted(CATEGORY_TIDS.items(), key=lambda kv: kv[1]):
+        events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                       "tid": tid, "args": {"name": cat}})
+    for span in tracer.spans():
+        events.append({
+            "name": span.name, "cat": span.cat, "ph": "X",
+            "ts": span.t0 * 1e6, "dur": span.dur_s * 1e6,
+            "pid": 0, "tid": CATEGORY_TIDS.get(span.cat, 9),
+            "args": {"step": span.step, **dict(span.args)},
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def export_chrome(tracer: Tracer, path: str) -> str:
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f, indent=1)
+    return path
+
+
+def validate_chrome(obj: dict) -> None:
+    """Schema floor for the export (and the tests' contract): raises
+    ``ValueError`` on anything chrome://tracing would choke on."""
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("not a Chrome trace: missing 'traceEvents'")
+    if not isinstance(obj["traceEvents"], list):
+        raise ValueError("'traceEvents' must be a list")
+    for i, ev in enumerate(obj["traceEvents"]):
+        if not isinstance(ev, dict):
+            raise ValueError(f"traceEvents[{i}] is not an object")
+        for k in ("ph", "name", "pid", "tid"):
+            if k not in ev:
+                raise ValueError(f"traceEvents[{i}] missing {k!r}")
+        if ev["ph"] == "X":
+            for k in ("ts", "dur"):
+                if not isinstance(ev.get(k), (int, float)):
+                    raise ValueError(
+                        f"traceEvents[{i}].{k} must be a number")
+            if ev["dur"] < 0:
+                raise ValueError(f"traceEvents[{i}].dur is negative")
+
+
+def load_chrome(path: str) -> dict:
+    with open(path) as f:
+        obj = json.load(f)
+    validate_chrome(obj)
+    return obj
+
+
+def spans_from_chrome(obj: dict) -> Tuple[Span, ...]:
+    """Rebuild :class:`Span` records from an exported trace — the reader
+    side for ``report --section trace`` and ``tools/trace_summary``."""
+    spans = []
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") != "X":
+            continue
+        args = dict(ev.get("args", {}))
+        step = int(args.pop("step", -1))
+        spans.append(Span(ev["name"], ev.get("cat", "host"),
+                          ev["ts"] / 1e6, (ev["ts"] + ev["dur"]) / 1e6,
+                          step, tuple(sorted(args.items()))))
+    return tuple(sorted(spans, key=lambda sp: (sp.step, sp.t0, sp.name)))

@@ -37,7 +37,20 @@ import signal
 import time
 from typing import Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+
 KINDS = ("kill", "sigterm", "stall", "corrupt")
+
+_WHERE = "repro/train/faults.py"
+
+
+def _log_fault(kind: str, step: int, detail: str) -> None:
+    """Injected faults announce themselves on the metrics stream (the
+    StdoutSink's flush=True survives the SIGKILL kinds, as the old bare
+    prints did)."""
+    obs_metrics.event("fault_injected",
+                      {"kind": kind, "step": step, "detail": detail},
+                      where=_WHERE, step=step)
 
 
 class FaultSpecError(ValueError):
@@ -99,24 +112,22 @@ class FaultInjector:
     def on_step(self, step: int) -> None:
         """Called inside the watchdog window at the start of each step."""
         for f in self._due("stall", step):
-            print(f"FAULT stall@{step}: sleeping {f.arg}s (injected slow "
-                  f"device)", flush=True)
+            _log_fault("stall", step,
+                       f"sleeping {f.arg}s (injected slow device)")
             time.sleep(f.arg)
         for f in self._due("sigterm", step):
-            print(f"FAULT sigterm@{step}: simulated preemption notice",
-                  flush=True)
+            _log_fault("sigterm", step, "simulated preemption notice")
             os.kill(os.getpid(), signal.SIGTERM)
         for f in self._due("kill", step):
-            print(f"FAULT kill@{step}: SIGKILL (unannounced preemption)",
-                  flush=True)
+            _log_fault("kill", step, "SIGKILL (unannounced preemption)")
             os.kill(os.getpid(), signal.SIGKILL)
 
     def on_saved(self, ckpt_path: str, step: int) -> None:
         """Called after each checkpoint commit with the payload path."""
         for f in self._due("corrupt", step):
             corrupt_file(ckpt_path)
-            print(f"FAULT corrupt@{step}: flipped bytes in {ckpt_path} "
-                  f"(injected bit-rot)", flush=True)
+            _log_fault("corrupt", step,
+                       f"flipped bytes in {ckpt_path} (injected bit-rot)")
 
     @property
     def any_pending(self) -> bool:

@@ -24,6 +24,7 @@ timing stable under the watchdog.
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import threading
 import time
@@ -31,6 +32,7 @@ from typing import Callable, Optional
 
 import jax
 
+from repro.obs import metrics as obs_metrics
 from repro.train import checkpoint as ckpt
 from repro.train.faults import FaultInjector, parse_faults
 from repro.train.state import TrainState
@@ -41,10 +43,12 @@ class StepTimeoutError(RuntimeError):
 
 
 def mlperf_log(tag: str, value=None):
-    ts = time.time()
-    suffix = "" if value is None else f": {value}"
-    print(f":::MLPv0.5.0 repro {ts:.9f} (repro/train/loop.py) {tag}{suffix}",
-          flush=True)
+    """The Appendix-1 tag line, emitted through the ``obs.metrics``
+    registry: the default ``StdoutSink`` prints the byte-identical
+    ``:::MLPv0.5.0`` line (flush=True) the old inline print produced, and
+    any attached sink (``--metrics`` JSONL, test MemorySink) sees the same
+    event."""
+    obs_metrics.event(tag, value, where="repro/train/loop.py")
 
 
 def authoritative_params(state: TrainState, train_step: Callable):
@@ -110,9 +114,17 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
           log_every: int = 10, ckpt_dir: Optional[str] = None,
           ckpt_every: int = 0, seed: int = 0, keep_last_k: int = 0,
           step_timeout_s: float = 0.0, max_step_retries: int = 3,
-          retry_backoff_s: float = 0.5, comm_plan=None, faults=None):
+          retry_backoff_s: float = 0.5, comm_plan=None, faults=None,
+          tracer=None):
     """Runs optimizer steps up to global step ``steps`` (a resumed state
-    continues from ``state.step``). Returns (state, history)."""
+    continues from ``state.step``). Returns (state, history).
+
+    ``tracer`` (an ``obs.trace.Tracer``, also threaded into the step via
+    ``make_train_step(..., tracer=...)``) makes the loop own the step
+    windows: ``begin_step`` before dispatch, ``end_step`` after
+    ``block_until_ready`` (draining the async probe callbacks), plus host
+    spans for checkpoint commits and instants for watchdog/preemption
+    events. A watchdog-aborted step's window is discarded."""
     mlperf_log("run_start")
     mlperf_log("run_set_random_seed", seed)
     injector = (faults if isinstance(faults, FaultInjector)
@@ -131,8 +143,11 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
     def save_ckpt(s: TrainState) -> None:
         nonlocal last_saved_step
         gstep = int(s.step)
-        path = ckpt.save(s, ckpt_dir, tag=ckpt.step_tag(gstep),
-                         comm_plan=comm_plan, keep_last_k=keep_last_k)
+        span = (tracer.host_span("checkpoint_commit", step=gstep)
+                if tracer is not None else contextlib.nullcontext())
+        with span:
+            path = ckpt.save(s, ckpt_dir, tag=ckpt.step_tag(gstep),
+                             comm_plan=comm_plan, keep_last_k=keep_last_k)
         last_saved_step = gstep
         mlperf_log("checkpoint_saved",
                    {"step": gstep, "tag": ckpt.step_tag(gstep)})
@@ -163,14 +178,27 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
 
             def run_step(state=state, batch=batch, i=i):
                 injector.on_step(i)
+                if tracer is not None:
+                    tracer.begin_step()
                 s2, m = step_fn(state, batch)
-                return jax.block_until_ready((s2, m))
+                out = jax.block_until_ready((s2, m))
+                if tracer is not None:
+                    tracer.end_step(i)
+                return out
 
             try:
                 state, metrics = _call_with_timeout(run_step, step_timeout_s)
                 retries = 0
             except StepTimeoutError as e:
                 retries += 1
+                if tracer is not None:
+                    # the hung step's probes are meaningless (and may still
+                    # trickle in) — drop its window, mark the event
+                    tracer.abort_step()
+                    tracer.instant("watchdog_timeout", step=i,
+                                   attempt=retries)
+                obs_metrics.counter("obs.watchdog_timeout_total",
+                                    where="repro/train/loop.py", step=i)
                 mlperf_log("watchdog_timeout",
                            {"step": i, "attempt": retries,
                             "timeout_s": step_timeout_s})
@@ -184,12 +212,17 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
                     try:
                         state = ckpt.load(state, ckpt_dir, tag=None)
                         i = int(state.step)
+                        if tracer is not None:
+                            tracer.instant("watchdog_restore", step=i)
                         mlperf_log("watchdog_restore", {"resume_step": i})
                         history.append({"step": i, "watchdog_restore": 1})
                     except ckpt.CheckpointError as err:
-                        print(f"watchdog: no restorable checkpoint "
-                              f"({err}); retrying with the in-memory "
-                              f"state", flush=True)
+                        # used to be a bare print that bypassed the tag
+                        # stream; now a first-class event on every sink
+                        mlperf_log("watchdog_no_checkpoint",
+                                   {"step": i, "error": str(err),
+                                    "action": "retrying with the "
+                                              "in-memory state"})
                 time.sleep(min(retry_backoff_s * 2 ** (retries - 1), 30.0))
                 continue
             if log_every and (i % log_every == 0 or i == steps - 1):
@@ -217,6 +250,8 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
             if preempted.is_set():
                 # announced preemption: the in-flight step has drained —
                 # commit the tail and hand back a resumable state
+                if tracer is not None:
+                    tracer.instant("preempt_drain", step=i)
                 mlperf_log("preempt_drain", {"step": i})
                 if ckpt_dir:
                     save_ckpt(state)

@@ -37,6 +37,8 @@ from repro.configs.base import CommConfig
 from repro.core import bucketing, compat, ddp, lars
 from repro.core.label_smoothing import IGNORE, smoothed_xent, top1_accuracy
 from repro.core.precision import cast_to_compute
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train.state import TrainState
 
 
@@ -72,7 +74,7 @@ def make_loss_fn(model, *, smoothing: float = 0.1, aux_coef: float = 0.01,
 def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                     smoothing: float = 0.1, mesh=None, comm: str = "xla",
                     bucket_mb: float = 4.0, comm_dtype: str = "bf16",
-                    grad_accum: int = 1, profile_batch=None):
+                    grad_accum: int = 1, profile_batch=None, tracer=None):
     """Returns train_step(state, batch) -> (state, metrics). Not jitted —
     the caller owns jit/shardings (launcher, dryrun, tests).
 
@@ -92,7 +94,13 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     the gathered forward copy — with ``gather_ahead`` (default) it lags
     the authoritative ``shards`` by one update.
     ``profile_batch`` (one real batch) enables
-    ``backward_profile='measured'`` for the autotuner."""
+    ``backward_profile='measured'`` for the autotuner.
+
+    ``tracer`` (an ``obs.trace.Tracer``) plants the step-timeline probes on
+    the explicit-DDP paths: forward/backward/update compute spans here,
+    per-bucket ``rs``/``ar``/``ag`` comm spans inside the ddp hooks. None
+    (the default) leaves the traced graph byte-identical to the
+    uninstrumented one — tracing is opt-in per run, not per step."""
     comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
         strategy=comm, bucket_mb=bucket_mb, wire_dtype=comm_dtype)
     comm, bucket_mb, comm_dtype = (comm_cfg.strategy, comm_cfg.bucket_mb,
@@ -202,8 +210,10 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         # reuses state.params (gathered at the end of the previous step).
         params = (ddp.gather_ahead_params(state.shards, plan,
                                           shard_axis=shard_axis,
-                                          wire_dtype=wire)
+                                          wire_dtype=wire, tracer=tracer)
                   if gather_ahead else state.params)
+        obs_trace.mark(tracer, "forward", "B",
+                       jax.tree.leaves(params)[:1], cat="compute")
         if overlap:
             # in-backward reduce-scatter: the wrapped loss's backward runs
             # each bucket's RS-terminal schedule the moment the group's
@@ -215,31 +225,44 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             def sink_loss(sks, p, b, bn):
                 p = ddp.wrap_params_for_overlap(
                     p, plan, strategy=comm, axes=axes, comm_dtype=wire,
-                    use_kernel=comm_cfg.use_kernel, shard_sinks=sks)
+                    use_kernel=comm_cfg.use_kernel, shard_sinks=sks,
+                    tracer=tracer)
                 return loss_fn(p, b, bn)
 
-            (_, (metrics, new_bn)), g_shards = jax.value_and_grad(
+            (loss_val, (metrics, new_bn)), g_shards = jax.value_and_grad(
                 sink_loss, has_aux=True)(sinks, params, batch,
                                          state.bn_state)
             g_shards = list(g_shards)
+            # sink cotangents are the backward's true outputs here: they
+            # exist only once every group's RS has fired and reduced
+            obs_trace.mark(tracer, "backward", "E", g_shards, cat="compute")
         else:
-            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+            (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch, state.bn_state)
+            # E on the raw (pre-reduce-scatter) grads: the RS below starts
+            # only after the whole backward ends — the testable invariant
+            obs_trace.mark(tracer, "backward", "E",
+                           jax.tree.leaves(grads), cat="compute")
             g_shards = ddp.reduce_scatter_grads(
                 grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
-                use_kernel=comm_cfg.use_kernel)
+                use_kernel=comm_cfg.use_kernel, tracer=tracer)
+        obs_trace.mark(tracer, "forward", "E", [loss_val], cat="compute")
+        obs_trace.mark(tracer, "backward", "B", [loss_val], cat="compute")
         if new_bn is not None:
             new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
         lr = schedule(state.step)
+        obs_trace.mark(tracer, "update", "B", g_shards, cat="compute")
         p_shards, m_shards = lars.sharded_update_from_shards(
             list(state.shards), g_shards, list(state.mom), lr, opt_cfg,
             plan, shard_axis=shard_axis, n_shards=n_shards,
             update_kernel=comm_cfg.update_kernel)
+        obs_trace.mark(tracer, "update", "E", p_shards, cat="compute")
         new_params = (params if gather_ahead else
                       ddp.all_gather_params(p_shards, plan,
                                             shard_axis=shard_axis,
-                                            wire_dtype=wire))
+                                            wire_dtype=wire,
+                                            tracer=tracer))
         metrics = dict(metrics, lr=lr)
         return TrainState(state.step + 1, new_params, m_shards, new_bn,
                           p_shards), metrics
@@ -247,27 +270,42 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     def local_step(state: TrainState, batch):
         if shard_update:
             return sharded_step(state, batch)
+        obs_trace.mark(tracer, "forward", "B",
+                       jax.tree.leaves(state.params)[:1], cat="compute")
         if overlap:
             def wrapped_loss(params, b, bn):
                 p = ddp.wrap_params_for_overlap(
                     params, plan, strategy=comm, axes=axes, comm_dtype=wire,
-                    use_kernel=comm_cfg.use_kernel)
+                    use_kernel=comm_cfg.use_kernel, tracer=tracer)
                 return loss_fn(p, b, bn)
-            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+            (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
                 wrapped_loss, has_aux=True)(state.params, batch,
                                             state.bn_state)
+            # the param cotangents pass through the in-backward all-reduce,
+            # so this backward span's window includes the overlapped comm
+            obs_trace.mark(tracer, "backward", "E",
+                           jax.tree.leaves(grads), cat="compute")
         else:
-            (_, (metrics, new_bn)), grads = jax.value_and_grad(
+            (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(state.params, batch, state.bn_state)
+            obs_trace.mark(tracer, "backward", "E",
+                           jax.tree.leaves(grads), cat="compute")
             grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
                                         plan=plan, comm_dtype=wire,
-                                        use_kernel=comm_cfg.use_kernel)
+                                        use_kernel=comm_cfg.use_kernel,
+                                        tracer=tracer)
+        obs_trace.mark(tracer, "forward", "E", [loss_val], cat="compute")
+        obs_trace.mark(tracer, "backward", "B", [loss_val], cat="compute")
         if new_bn is not None:
             # BN batch stats stay local (paper §III-A.2); only the moving-
             # average *buffers* are averaged so the SPMD state is replicated
             new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        obs_trace.mark(tracer, "update", "B",
+                       jax.tree.leaves(grads)[:1], cat="compute")
         state, metrics = sgd_update(state, grads, metrics, new_bn)
+        obs_trace.mark(tracer, "update", "E",
+                       jax.tree.leaves(state.params), cat="compute")
         return state, metrics
 
     def train_step(state: TrainState, batch):
@@ -338,12 +376,19 @@ def _measure_profile(model, batch, *, smoothing: float, n_dp: int = 1):
         local_loss = make_loss_fn(model, smoothing=smoothing, mesh=None)
         prof = measure_backward_profile(
             lambda p: local_loss(p, batch, bn)[0], params)
-        print(f"measured backward profile: {len(prof.cum_elems)} groups, "
-              f"total {prof.total_s * 1e3:.1f}ms", flush=True)
+        obs_metrics.event(
+            "backward_profile_measured",
+            {"groups": len(prof.cum_elems),
+             "total_ms": round(prof.total_s * 1e3, 1),
+             "forward_ms": (None if prof.t_forward_s is None
+                            else round(prof.t_forward_s * 1e3, 1))},
+            where="repro/train/step.py")
         return prof
     except Exception as e:  # noqa: BLE001 — profile is best-effort
-        print(f"backward profile capture failed ({type(e).__name__}: "
-              f"{e}); falling back to the FLOPs model", flush=True)
+        obs_metrics.event(
+            "backward_profile_fallback",
+            f"{type(e).__name__}: {e}; falling back to the FLOPs model",
+            where="repro/train/step.py")
         return None
 
 

@@ -1,0 +1,67 @@
+"""Print the slowest spans from a ``launch.train --trace`` Chrome-trace.
+
+The quick console answer to "where did the step go?" without loading the
+JSON into chrome://tracing — used on the CI trace artifact and locally:
+
+  PYTHONPATH=src python -m tools.trace_summary trace.json [N] [--per-step]
+
+Default: top-N spans by median duration across steps (compile-skewed step
+0 is dropped when more than one step was traced). ``--per-step``: top-N
+individual (step, span) rows instead, nothing dropped.
+"""
+from __future__ import annotations
+
+import sys
+from collections import defaultdict
+
+import numpy as np
+
+
+def fmt_t(x: float) -> str:
+    if x < 1e-4:
+        return f"{x * 1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def summarize(trace_path: str, n: int = 15, per_step: bool = False):
+    """[(duration_s, label, cat)] slowest-first, length <= n."""
+    from repro.obs import trace as obs_trace
+    spans = obs_trace.spans_from_chrome(obs_trace.load_chrome(trace_path))
+    if per_step:
+        rows = [(s.dur_s, f"{s.name} @step{s.step}", s.cat) for s in spans]
+        rows.sort(reverse=True)
+        return rows[:n]
+    steps = sorted({s.step for s in spans if s.step >= 0})
+    skip = {steps[0]} if len(steps) > 1 else set()   # compile-skewed step
+    by_name = defaultdict(list)
+    cats = {}
+    for s in spans:
+        if s.step in skip:
+            continue
+        by_name[s.name].append(s.dur_s)
+        cats[s.name] = s.cat
+    rows = [(float(np.median(ds)), f"{name} (median of {len(ds)})",
+             cats[name]) for name, ds in by_name.items()]
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        sys.exit("usage: trace_summary.py trace.json [N] [--per-step]")
+    per_step = "--per-step" in argv
+    argv = [a for a in argv if a != "--per-step"]
+    path = argv[0]
+    n = int(argv[1]) if len(argv) > 1 else 15
+    rows = summarize(path, n, per_step=per_step)
+    print(f"slowest {len(rows)} spans in {path}"
+          f" ({'per step' if per_step else 'median across steps'}):")
+    for dur, label, cat in rows:
+        print(f"{fmt_t(dur):>10}  [{cat:7}] {label}")
+
+
+if __name__ == "__main__":
+    main()
