@@ -17,12 +17,17 @@ ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 	@if command -v ruff >/dev/null 2>&1; then \
 		ruff check src tests benchmarks tools; \
 	else echo "ruff not installed locally; CI runs it"; fi
+	python tools/lint_deprecated.py
 	$(PY) -m benchmarks.run --smoke --json experiments/bench-smoke.json
 	@$(PY) -c "import json; rows = json.load(open('experiments/bench-smoke.json')); \
 		assert any('shard_update_plan' in r['name'] for r in rows), \
 		'sharded smoke row missing from bench artifact'; \
 		assert any('gather_ahead_plan' in r['name'] for r in rows), \
 		'gather-ahead smoke row missing from bench artifact'; \
+		assert any('zero3_plan' in r['name'] for r in rows), \
+		'zero3 timeline smoke row missing from bench artifact'; \
+		assert any('zero3_param_mem' in r['name'] for r in rows), \
+		'zero3 peak-param-memory smoke row missing from bench artifact'; \
 		assert any('ckpt.roundtrip' in r['name'] for r in rows), \
 		'ckpt-roundtrip smoke row missing from bench artifact'; \
 		assert any('trace.drift' in r['name'] for r in rows), \

@@ -572,7 +572,8 @@ batch = None
 fns, states = {}, {}
 for sname in SCHEDULES:
     for sh in (False, True):
-        cc = CommConfig(strategy=sname, bucket_mb=0.25, shard_update=sh)
+        cc = CommConfig(strategy=sname, bucket_mb=0.25,
+                        sharding="zero1" if sh else "replicated")
         step = make_train_step(model, lars.OptConfig(kind="lars"), sched,
                                mesh=mesh, comm=cc)
         s0 = st.init_state(model, 0,
@@ -617,7 +618,7 @@ for (sname, sh), ts in times.items():
         ar = autotune(model.param_pd, schedule=s, axes=("data",),
                       sizes=(16,), family="conv")
         sh = autotune(model.param_pd, schedule=s, axes=("data",),
-                      sizes=(16,), family="conv", shard_update=True)
+                      sizes=(16,), family="conv", sharding="zero1")
         emit(f"comm.shard_update_{s}", on,
              f"replicated {off:.0f}us -> sharded {on:.0f}us "
              f"({off/on:.2f}x hostCPU, {rounds} interleaved rounds); v5e "
@@ -640,7 +641,7 @@ def bench_shard_update_plan(quick: bool):
         ar = autotune(model.param_pd, schedule="ring", axes=axes,
                       sizes=sizes, family="conv")
         sh = autotune(model.param_pd, schedule="ring", axes=axes,
-                      sizes=sizes, family="conv", shard_update=True)
+                      sizes=sizes, family="conv", sharding="zero1")
         assert sh.sim.t_step_s < ar.sim.t_step_s, (sh.sim, ar.sim)
         emit(f"comm.shard_update_plan_{tag}",
              (time.perf_counter() - t0) * 1e6,
@@ -667,12 +668,12 @@ def bench_gather_ahead_plan(quick: bool):
                              ("2x16x16", ("pod", "data"), (2, 16))]:
         t0 = time.perf_counter()
         ga = autotune(model.param_pd, schedule="ring", axes=axes,
-                      sizes=sizes, family="conv", shard_update=True)
+                      sizes=sizes, family="conv", sharding="zero1")
         # AG@end priced on the SAME plan, so the delta is purely the
         # gather issue point
         end = autotune(model.param_pd, schedule="ring", axes=axes,
-                       sizes=sizes, family="conv", shard_update=True,
-                       gather_ahead=False, candidates=(ga.bucket_mb,))
+                       sizes=sizes, family="conv", sharding="zero1",
+                       gather="at_end", candidates=(ga.bucket_mb,))
         assert end.sim.mode == "shard_update"
         assert ga.sim.mode == "shard_update+gather_ahead"
         # hiding the gather can only help, and on these meshes it fully
@@ -685,6 +686,64 @@ def bench_gather_ahead_plan(quick: bool):
              f"t_step {end.sim.t_step_s*1e3:.2f}ms -> gather-ahead "
              f"{ga.sim.t_step_s*1e3:.2f}ms ({hidden*1e6:.0f}us of gather "
              f"hidden under next fwd) @ {ga.bucket_mb:g}MB")
+
+
+def bench_zero3_plan(quick: bool):
+    """ZeRO-3 accounting rows (part of --smoke, asserted in CI): the
+    just-in-time per-group forward gather priced against the ZeRO-1
+    gather-ahead baseline on both production meshes, plus the peak
+    param-memory row — ``cost.param_memory``'s analytic byte accounting
+    (the host-CPU CI mesh cannot measure device memory), asserting the
+    reduction clears the (n-1)/n floor at n=8, the shard count the
+    8-device equivalence matrix actually runs."""
+    from repro.comm import cost as cost_mod
+    from repro.comm.autotune import autotune
+    from repro.configs import get_config
+    from repro.core import bucketing
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("resnet50"))
+    for tag, axes, sizes in [("16x16", ("data",), (16,)),
+                             ("2x16x16", ("pod", "data"), (2, 16))]:
+        t0 = time.perf_counter()
+        z1 = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv", sharding="zero1")
+        # both gather policies priced on the SAME bucket size, so the
+        # deltas are purely the policy
+        z3 = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv", sharding="zero3",
+                      candidates=(z1.bucket_mb,))
+        z3r = autotune(model.param_pd, schedule="ring", axes=axes,
+                       sizes=sizes, family="conv", sharding="zero3",
+                       gather="ahead", candidates=(z1.bucket_mb,))
+        assert z3.sim.mode == "zero3_jit_gather", z3.sim
+        assert z3r.sim.mode == "zero3_retain", z3r.sim
+        # retain skips the remat re-gather (one AG per group, backward
+        # unstretched), so it can only be <= per_group
+        assert z3r.sim.t_step_s <= z3.sim.t_step_s, (z3r.sim, z3.sim)
+        emit(f"comm.zero3_plan_{tag}", (time.perf_counter() - t0) * 1e6,
+             f"ring zero1 gather-ahead t_step {z1.sim.t_step_s*1e3:.2f}ms "
+             f"-> zero3 per_group {z3.sim.t_step_s*1e3:.2f}ms / retain "
+             f"{z3r.sim.t_step_s*1e3:.2f}ms @ {z1.bucket_mb:g}MB (AG "
+             f"{z3r.sim.t_gather_s*1e6:.0f}us, remat-doubled "
+             f"{z3.sim.t_gather_s*1e6:.0f}us)")
+    # peak param memory: analytic and n-independent — zero1 keeps the 4N
+    # fp32 replica plus the full wire image, zero3 keeps one group's wire
+    # bucket + fp32 tensors at a time (docs/comm.md byte accounting)
+    t0 = time.perf_counter()
+    n = 8
+    plan = bucketing.make_plan(model.param_pd, bucket_mb=1.0)
+    z1m = cost_mod.param_memory(plan, n, sharding="zero1")
+    z3m = cost_mod.param_memory(plan, n, sharding="zero3")
+    red = cost_mod.param_memory_reduction(plan, n)
+    assert red >= (n - 1) / n, (
+        f"zero3 peak-param reduction {red:.4f} below the (n-1)/n={n-1}/{n} "
+        f"floor: zero1 peak {z1m.peak_bytes}B vs zero3 {z3m.peak_bytes}B")
+    emit("comm.zero3_param_mem", (time.perf_counter() - t0) * 1e6,
+         f"peak live param bytes zero1 {z1m.peak_bytes/2**20:.1f}MB "
+         f"(4N fp32 replica + bf16 wire image) -> zero3 "
+         f"{z3m.peak_bytes/2**20:.1f}MB (largest group only) = "
+         f"{100*red:.1f}% reduction @ 1MB buckets, >= {n-1}/{n} floor")
 
 
 def bench_ckpt_roundtrip(quick: bool):
@@ -708,7 +767,7 @@ def bench_ckpt_roundtrip(quick: bool):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=1,
                                          total_steps=10))
-    cc = CommConfig(strategy="ring", bucket_mb=0.25, shard_update=True)
+    cc = CommConfig(strategy="ring", bucket_mb=0.25, sharding="zero1")
     step = make_train_step(model, lars_mod.OptConfig(kind="lars"), sched,
                            mesh=mesh, comm=cc)
     s = st_mod.init_state(model, 0, sharded_plan=step.bucket_plan,
@@ -831,12 +890,13 @@ print("ring;" + json.dumps(obs_drift.measured_span_times(tr2)), flush=True)
             emit(f"trace.drift_{sched}", (time.perf_counter() - t0) * 1e6,
                  f"MISSING rows: {r.stderr[-120:]}")
             continue
-        cc = CommConfig(strategy=sched, bucket_mb=0.25, shard_update=shard)
+        cc = CommConfig(strategy=sched, bucket_mb=0.25,
+                        sharding="zero1" if shard else "replicated")
         cplan = comm_plan_mod.make(
             cc, plan, resolved_bucket_mb=0.25, mesh_axes=("data",),
             mesh_sizes=(8,), shard_axis="data",
             n_shards=8 if shard else 1, strategy=sched, overlap=False,
-            shard_update=shard, gather_ahead=False)
+            sharding="zero1" if shard else "replicated", gather="at_end")
         drifts = obs_drift.compute(res[sched], cplan)
         want = plan.n_buckets * (2 if shard else 1)
         assert len(drifts) == want, (
@@ -877,7 +937,8 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_kernel_lars_update, bench_comm_bucketing,
        bench_comm_schedules, bench_comm_overlap, bench_comm_shard_update,
        bench_autotune_plan, bench_shard_update_plan,
-       bench_gather_ahead_plan, bench_ckpt_roundtrip, bench_trace_drift]
+       bench_gather_ahead_plan, bench_zero3_plan, bench_ckpt_roundtrip,
+       bench_trace_drift]
 
 # --smoke: the CI micro-run — pure-math projection/accounting rows plus ONE
 # small 8-device subprocess (bench_trace_drift: traced collectives, no
@@ -886,7 +947,7 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
 # gather-ahead, and predicted-vs-measured drift rows)
 SMOKE = [bench_table1, bench_fig2, bench_autotune_plan,
          bench_shard_update_plan, bench_gather_ahead_plan,
-         bench_ckpt_roundtrip, bench_trace_drift]
+         bench_zero3_plan, bench_ckpt_roundtrip, bench_trace_drift]
 
 
 def main() -> None:

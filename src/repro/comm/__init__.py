@@ -7,11 +7,24 @@ binary tree) — each paired with an alpha-beta cost model that predicts
 wall time from mesh shape, payload bytes, and the link constants in
 ``launch/mesh.py``. ``autotune`` searches bucket size (and schedule)
 against the cost model plus an overlap timeline. See docs/comm.md.
+
+``plan_for(config, mesh, tree)`` is the one-call entry point that turns a
+``CommConfig`` (or a full run config carrying one at ``.comm``) plus a
+mesh and a parameter (descriptor) pytree into a resolved, serializable
+``CommPlan``: it resolves the shard axis, autotunes ``bucket_mb='auto'``
+(searching schedules too when ``strategy='auto'``), commits the bucket
+packing layout, and records the ``sharding``/``gather`` policy — the same
+assembly ``train.step.make_train_step`` performs, without building a
+step. ``dryrun``/``report``/tests should call this instead of hand-wiring
+``autotune``/``best_plan``/``plan.make``.
 """
+from typing import Optional, Sequence, Tuple, Union
+
 from repro.comm.registry import (  # noqa: F401
     available, get_reduce_scatter, get_schedule)
 from repro.comm.cost import (  # noqa: F401
-    CostBreakdown, Link, lars_update_time_s, predict, predict_all_gather,
+    CostBreakdown, Link, lars_update_time_s, param_memory,
+    param_memory_reduction, predict, predict_all_gather,
     predict_reduce_scatter, predict_table)
 # NOTE: ``repro.comm.autotune`` stays a *module* attribute here (the
 # bucket-size search entry point is ``repro.comm.autotune.autotune``);
@@ -24,3 +37,72 @@ from repro.comm.autotune import (  # noqa: F401
 # its error are lifted to the package root.
 from repro.comm.plan import CommPlan, CommPlanError  # noqa: F401
 
+
+def _mesh_axes(mesh) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
+    """Accept a ``jax.sharding.Mesh`` or an ``(axes, sizes)`` pair."""
+    if isinstance(mesh, (tuple, list)) and len(mesh) == 2:
+        axes, sizes = mesh
+        return tuple(axes), tuple(int(s) for s in sizes)
+    axes = tuple(mesh.axis_names)
+    return axes, tuple(int(mesh.shape[a]) for a in axes)
+
+
+def plan_for(config, mesh, tree, *, family: Optional[str] = None,
+             profile: Optional[BackwardProfile] = None,
+             t_backward_s: Optional[float] = None,
+             schedules: Optional[Sequence[str]] = None,
+             resolved_bucket_mb: Optional[Union[float, str]] = None,
+             strategy: Optional[str] = None, overlap: Optional[bool] = None,
+             sharding: Optional[str] = None, gather: Optional[str] = None,
+             n_shards: Optional[int] = None) -> CommPlan:
+    """Resolve a ``CommConfig`` against a mesh + parameter tree into a
+    committed ``CommPlan`` (see the module docstring). ``config`` is a
+    ``CommConfig`` or any object with a ``.comm`` CommConfig attribute
+    (the run configs); ``mesh`` a ``jax.sharding.Mesh`` or an
+    ``(axes, sizes)`` pair. ``bucket_mb='auto'`` autotunes against the
+    alpha-beta timeline (``family``/``profile``/``t_backward_s`` refine
+    the backward model); ``strategy='auto'`` additionally searches every
+    costed schedule (restrict with ``schedules``). The keyword overrides
+    record *effective* values when a caller (``make_train_step``) has
+    already downgraded them; ``resolved_bucket_mb`` skips the re-autotune
+    when the caller already resolved 'auto'."""
+    from repro.comm import autotune as autotune_mod
+    from repro.comm import cost as cost_mod
+    from repro.comm import plan as plan_mod
+    from repro.core import bucketing
+
+    comm_cfg = getattr(config, "comm", config)
+    axes, sizes = _mesh_axes(mesh)
+    eff_strategy = strategy or comm_cfg.strategy
+    eff_sharding = sharding if sharding is not None else comm_cfg.sharding
+    eff_gather = gather if gather is not None else comm_cfg.gather
+    wire_bytes = 2 if comm_cfg.wire_dtype == "bf16" else 4
+    shard_axis, mesh_n_shards = cost_mod.shard_axis_size(axes, sizes)
+
+    bucket_mb = (comm_cfg.bucket_mb if resolved_bucket_mb is None
+                 else resolved_bucket_mb)
+    if bucket_mb == "auto":
+        if eff_strategy in ("auto", "naive"):
+            tuned = autotune_mod.best_plan(
+                tree, axes=axes, sizes=sizes, schedules=schedules,
+                dtype_bytes=wire_bytes, t_backward_s=t_backward_s,
+                family=family, profile=profile, sharding=eff_sharding,
+                gather=eff_gather, param_dtype_bytes=wire_bytes)
+            if eff_strategy == "auto":
+                eff_strategy = tuned.schedule
+        else:
+            tuned = autotune_mod.autotune(
+                tree, schedule=eff_strategy, axes=axes, sizes=sizes,
+                dtype_bytes=wire_bytes, t_backward_s=t_backward_s,
+                family=family, profile=profile, sharding=eff_sharding,
+                gather=eff_gather, param_dtype_bytes=wire_bytes)
+        bucket_mb = tuned.bucket_mb
+    bp = bucketing.make_plan(tree, bucket_mb=bucket_mb,
+                             dtype_bytes=wire_bytes)
+    if n_shards is None:
+        n_shards = mesh_n_shards if eff_sharding != "replicated" else 1
+    return plan_mod.make(
+        comm_cfg, bp, resolved_bucket_mb=bucket_mb, mesh_axes=axes,
+        mesh_sizes=sizes, shard_axis=shard_axis, n_shards=n_shards,
+        strategy=eff_strategy, overlap=overlap, sharding=eff_sharding,
+        gather=eff_gather)

@@ -35,14 +35,23 @@ Two extensions (docs/comm.md):
   captured at the overlap group boundaries (``ddp.wrap_params_for_probe``)
   become a cumulative time-vs-volume curve (:class:`BackwardProfile`) that
   any candidate plan's group boundaries interpolate into.
-* ``shard_update=True`` prices the ZeRO-1 timeline instead of the
+* ``sharding='zero1'`` prices the ZeRO-1 timeline instead of the
   all-reduce one: per-bucket reduce-scatter (overlapped with the backward),
   the 1/n packed update on the persistent shards, and the param
   all-gather — RS(g) + AG(p) + update/n vs AR(g) + full update.
-  ``gather_ahead`` (default) hides the AG under the NEXT step's forward
-  (``ddp.gather_ahead_params``, the implemented timeline);
-  ``gather_ahead=False`` charges the full AG to the step (the end-of-step
-  issue point).
+  ``gather='ahead'`` (default) hides the AG under the NEXT step's forward
+  (``ddp.gather_ahead_params``, the implemented timeline); ``'at_end'``
+  charges the full AG to the step (the end-of-step issue point).
+* ``sharding='zero3'`` prices the just-in-time timeline: the *forward*
+  owns the param all-gathers. Bucket groups are consumed in reverse
+  packing order (packing is backward-completion order), each group's AG
+  must land before its forward compute, AGs serialize on the wire, and
+  with ``gather='per_group'`` the backward re-gathers each group the same
+  way (the rematerialized forward re-runs the AG), stretching the
+  effective backward timeline; ``gather='ahead'`` retains the forward
+  copies so the backward pays nothing extra. The per-group forward time
+  is apportioned from the measured ``t_forward`` (PR-7 probe) exactly
+  like the backward curve.
 """
 from __future__ import annotations
 
@@ -88,9 +97,11 @@ class OverlapSim:
     t_step_s: float              # backward + exposed comm (+ update)
     overlap_eff: float           # fraction of comm hidden: 1 - exposed/comm
     t_update_s: float = 0.0      # optimizer step (1/n of it when sharded)
-    t_gather_s: float = 0.0      # param all-gather (sharded mode only)
+    t_gather_s: float = 0.0      # param all-gather (sharded modes only;
+                                 # zero3 per_group counts both passes)
     mode: str = "allreduce"      # 'allreduce' | 'shard_update' (AG at step
-                                 # end) | 'shard_update+gather_ahead'
+                                 # end) | 'shard_update+gather_ahead' |
+                                 # 'zero3_jit_gather' | 'zero3_retain'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +211,33 @@ def estimate_backward_time(n_params: int, *, per_device_batch: int = 320,
     return flops / (mesh_consts.PEAK_FLOPS_BF16 * mfu)
 
 
+def resolve_policy(sharding: Optional[str], gather: Optional[str], *,
+                   shard_update: bool = False, gather_ahead: bool = True
+                   ) -> Tuple[str, str]:
+    """Map the deprecated boolean spellings onto the ``sharding=``/
+    ``gather=`` policy enum when the enum is not given explicitly."""
+    if sharding is None:
+        sharding = "zero1" if shard_update else "replicated"
+    if gather is None:
+        gather = ("per_group" if sharding == "zero3"
+                  else ("ahead" if gather_ahead else "at_end"))
+    return sharding, gather
+
+
+def _forward_budget(t_backward_s: float, profile: Optional[BackwardProfile],
+                    t_forward_s: Optional[float]) -> float:
+    """Forward-time budget, resolved in order: explicit ``t_forward_s`` >
+    the profile's measured ``t_forward_s`` (rescaled the same way the
+    backward curve is, so an explicit ``t_backward_s`` override stays
+    proportional) > the t_backward/2 heuristic."""
+    if t_forward_s is not None:
+        return t_forward_s
+    if (profile is not None and profile.t_forward_s is not None
+            and profile.total_s > 0):
+        return profile.t_forward_s * (t_backward_s / profile.total_s)
+    return 0.5 * t_backward_s
+
+
 def simulate(plan: bucketing.BucketPlan, schedule: str,
              axes: Sequence[str], sizes: Sequence[int], *,
              dtype_bytes: int = 2, t_backward_s: float,
@@ -207,56 +245,105 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
              profile: Optional[BackwardProfile] = None,
              shard_update: bool = False, param_dtype_bytes: int = 2,
              gather_ahead: bool = True,
-             t_forward_s: Optional[float] = None) -> OverlapSim:
+             t_forward_s: Optional[float] = None,
+             sharding: Optional[str] = None,
+             gather: Optional[str] = None) -> OverlapSim:
     """Walk the §III-C.2 timeline: groups finish their backward in packing
     order; each bucket's collective starts at max(grads ready, link free).
 
-    ``shard_update=True`` prices the ZeRO-1 timeline instead: the per-bucket
+    ``sharding='zero1'`` prices the ZeRO-1 timeline instead: the per-bucket
     collective is the reduce-scatter-terminal form (issued inside the
     backward), the optimizer step runs on 1/n_shards of the persistent
     shards, and the param all-gather (``param_dtype_bytes`` per element —
-    bf16 by default) is priced per ``gather_ahead``: True (default) issues
-    it at the start of the next step's forward, so it hides up to
-    ``t_forward_s`` and only the overhang is charged; False issues it at
-    step end, fully exposed. The forward budget resolves in order: explicit
-    ``t_forward_s`` > the profile's measured ``t_forward_s`` (rescaled the
-    same way the backward curve is, so an explicit ``t_backward_s``
-    override stays proportional) > the t_backward/2 heuristic."""
+    bf16 by default) is priced per ``gather``: 'ahead' (default) issues it
+    at the start of the next step's forward, so it hides up to the forward
+    budget (see :func:`_forward_budget`) and only the overhang is charged;
+    'at_end' issues it at step end, fully exposed.
+
+    ``sharding='zero3'`` walks the AG-in-forward timeline: bucket groups
+    are consumed in REVERSE packing order during the forward (packing is
+    backward-completion order), each group's forward compute waits for its
+    just-in-time AG (AGs serialize on the wire), and the forward budget is
+    apportioned over groups by volume. With ``gather='per_group'`` the
+    backward re-gathers every group the same way (remat re-runs the AG),
+    stretching the effective backward timeline the RS overlap runs
+    against; ``gather='ahead'`` retains the forward copies. RS and AG are
+    budgeted on independent wire timelines (full duplex).
+
+    ``shard_update``/``gather_ahead`` remain as the deprecated boolean
+    spellings; the enum kwargs win when both are given."""
+    sharding, gather = resolve_policy(sharding, gather,
+                                      shard_update=shard_update,
+                                      gather_ahead=gather_ahead)
     bt = backward_times(plan, t_backward_s, profile)
-    ready = np.cumsum(bt)
+    sharded = sharding != "replicated"
+    n_elems = int(sum(plan.bucket_sizes))
+    n_buckets = plan.n_buckets
+    ag_times = [
+        cost.predict_all_gather(axes, sizes, s * param_dtype_bytes,
+                                links=links).time_s
+        for s in plan.bucket_sizes] if sharded else [0.0] * n_buckets
+    exposed = 0.0
+    t_gather = 0.0
+
+    if sharding == "zero3":
+        # -- forward: just-in-time per-group AG, reverse packing order --
+        t_fwd = _forward_budget(t_backward_s, profile, t_forward_s)
+        total = float(n_elems) or 1.0
+        fwd_t = [t_fwd * s / total for s in plan.bucket_sizes]
+        ag_free = 0.0
+        compute_free = 0.0
+        for b in reversed(range(n_buckets)):
+            ag_free += ag_times[b]          # AGs serialize on the wire
+            compute_free = max(compute_free, ag_free) + fwd_t[b]
+        exposed += max(0.0, compute_free - t_fwd)
+        t_gather += sum(ag_times)
+        if gather == "per_group":
+            # backward re-gathers group b before its backward compute —
+            # the stalls stretch the effective backward timeline
+            rag_free = 0.0
+            bfree = 0.0
+            ready = []
+            for b in range(n_buckets):
+                rag_free += ag_times[b]
+                bfree = max(bfree, rag_free) + bt[b]
+                ready.append(bfree)
+            t_bwd_eff = bfree
+            t_gather += sum(ag_times)
+        else:                               # 'ahead': retain, no re-gather
+            ready = list(np.cumsum(bt))
+            t_bwd_eff = t_backward_s
+    else:
+        ready = list(np.cumsum(bt))
+        t_bwd_eff = t_backward_s
+
+    # -- gradient collective, overlapped with the (effective) backward --
     free = 0.0
     t_comm = 0.0
-    n_elems = int(sum(plan.bucket_sizes))
     for b, payload in enumerate(plan.bucket_bytes(dtype_bytes)):
-        pred = cost.predict_reduce_scatter if shard_update else cost.predict
+        pred = cost.predict_reduce_scatter if sharded else cost.predict
         c = pred(schedule, axes, sizes, payload,
                  n_buckets=1, links=links).time_s
         free = max(float(ready[b]), free) + c
         t_comm += c
-    exposed = max(0.0, free - t_backward_s)
-    if not shard_update:
+    exposed += max(0.0, free - t_bwd_eff) + (t_bwd_eff - t_backward_s)
+
+    if not sharded:
         t_update = cost.lars_update_time_s(n_elems, 1)
-        t_gather = 0.0
         mode = "allreduce"
     else:
         _, n_shards = cost.shard_axis_size(axes, sizes)
         t_update = cost.lars_update_time_s(n_elems, n_shards)
-        t_gather = sum(
-            cost.predict_all_gather(axes, sizes, s * param_dtype_bytes,
-                                    links=links).time_s
-            for s in plan.bucket_sizes)
-        if gather_ahead:
-            if t_forward_s is not None:
-                t_fwd = t_forward_s
-            elif (profile is not None and profile.t_forward_s is not None
-                  and profile.total_s > 0):
-                t_fwd = profile.t_forward_s * (t_backward_s
-                                               / profile.total_s)
-            else:
-                t_fwd = 0.5 * t_backward_s
+        if sharding == "zero3":
+            mode = ("zero3_jit_gather" if gather == "per_group"
+                    else "zero3_retain")
+        elif gather == "ahead":
+            t_gather = sum(ag_times)
+            t_fwd = _forward_budget(t_backward_s, profile, t_forward_s)
             exposed += max(0.0, t_gather - t_fwd)
             mode = "shard_update+gather_ahead"
         else:
+            t_gather = sum(ag_times)
             exposed += t_gather
             mode = "shard_update"
         t_comm += t_gather
@@ -276,13 +363,21 @@ def autotune(tree, *, schedule: str, axes: Sequence[str],
              links: Optional[Dict[str, cost.Link]] = None,
              profile: Optional[BackwardProfile] = None,
              shard_update: bool = False, gather_ahead: bool = True,
-             param_dtype_bytes: int = 2) -> TunedPlan:
+             param_dtype_bytes: int = 2,
+             sharding: Optional[str] = None,
+             gather: Optional[str] = None) -> TunedPlan:
     """Best bucket size for one schedule on one mesh. ``tree`` is the
     parameter (descriptor) pytree the plans are built from; ``family``
     (configs ModelConfig.family) refines the backward-time default when no
-    measured ``t_backward_s``/``profile`` is given; ``shard_update`` prices
-    the ZeRO-1 RS(g)+update/n+AG(p) timeline instead of AR(g)+update,
-    with the AG hidden behind the next forward when ``gather_ahead``."""
+    measured ``t_backward_s``/``profile`` is given; ``sharding='zero1'``
+    prices the RS(g)+update/n+AG(p) timeline instead of AR(g)+update (the
+    AG hidden behind the next forward when ``gather='ahead'``), and
+    ``sharding='zero3'`` prices the AG-in-forward JIT-gather timeline
+    (see :func:`simulate`). The deprecated ``shard_update``/
+    ``gather_ahead`` booleans still resolve when the enum is absent."""
+    sharding, gather = resolve_policy(sharding, gather,
+                                      shard_update=shard_update,
+                                      gather_ahead=gather_ahead)
     if t_backward_s is None:
         if profile is not None:
             t_backward_s = profile.total_s
@@ -297,8 +392,7 @@ def autotune(tree, *, schedule: str, axes: Sequence[str],
                                    dtype_bytes=dtype_bytes)
         sim = simulate(plan, schedule, axes, sizes, dtype_bytes=dtype_bytes,
                        t_backward_s=t_backward_s, links=links,
-                       profile=profile, shard_update=shard_update,
-                       gather_ahead=gather_ahead,
+                       profile=profile, sharding=sharding, gather=gather,
                        param_dtype_bytes=param_dtype_bytes)
         key = (sim.t_step_s, plan.n_buckets)
         if best is None or key < best[0]:
@@ -315,20 +409,24 @@ def best_plan(tree, *, axes: Sequence[str], sizes: Sequence[int],
               links: Optional[Dict[str, cost.Link]] = None,
               profile: Optional[BackwardProfile] = None,
               shard_update: bool = False, gather_ahead: bool = True,
-              param_dtype_bytes: int = 2) -> TunedPlan:
+              param_dtype_bytes: int = 2,
+              sharding: Optional[str] = None,
+              gather: Optional[str] = None) -> TunedPlan:
     """Joint (schedule x bucket size) search over every registered schedule
     that has a cost model — what the dry-run comm table reports."""
     if schedules is None:
         from repro.comm.registry import available
         schedules = available()
+    sharding, gather = resolve_policy(sharding, gather,
+                                      shard_update=shard_update,
+                                      gather_ahead=gather_ahead)
     best = None
     for s in schedules:
         try:
             t = autotune(tree, schedule=s, axes=axes, sizes=sizes,
                          dtype_bytes=dtype_bytes, t_backward_s=t_backward_s,
                          family=family, links=links, profile=profile,
-                         shard_update=shard_update,
-                         gather_ahead=gather_ahead,
+                         sharding=sharding, gather=gather,
                          param_dtype_bytes=param_dtype_bytes)
         except KeyError:          # registered but uncosted schedule
             continue

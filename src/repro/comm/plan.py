@@ -33,7 +33,8 @@ import os
 import tempfile
 from typing import Optional, Sequence, Tuple, Union
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2
+_SHARDING_FOR_BOOL = {False: "replicated", True: "zero1"}
 
 
 class CommPlanError(RuntimeError):
@@ -71,7 +72,25 @@ class CommPlan:
     n_shards: int
     bucket_sizes: Tuple[int, ...]
     slots: Tuple[SlotSpec, ...]
+    sharding: str = "replicated"        # 'replicated' | 'zero1' | 'zero3'
+    gather: str = "ahead"               # 'ahead' | 'at_end' | 'per_group'
     version: int = PLAN_VERSION
+
+    def __post_init__(self):
+        # Reconcile the v1 boolean spellings with the v2 policy enum so
+        # legacy direct constructions (shard_update=True without sharding=)
+        # and v2 ones normalize to the same object. The enum wins when it
+        # carries information the booleans cannot (zero3/per_group);
+        # otherwise a non-default boolean upgrades the defaulted enum.
+        sharding, gather = self.sharding, self.gather
+        if sharding == "replicated" and self.shard_update:
+            sharding = "zero1"
+        if sharding != "zero3" and gather == "ahead" and not self.gather_ahead:
+            gather = "at_end"
+        object.__setattr__(self, "sharding", sharding)
+        object.__setattr__(self, "gather", gather)
+        object.__setattr__(self, "shard_update", sharding != "replicated")
+        object.__setattr__(self, "gather_ahead", gather == "ahead")
 
     # ------------------------------------------------------------- rebuild
 
@@ -87,8 +106,8 @@ class CommPlan:
             bucket_mb=(self.requested_bucket_mb if reautotune
                        else self.bucket_mb),
             wire_dtype=self.wire_dtype, overlap=self.overlap,
-            shard_update=self.shard_update, update_kernel=self.update_kernel,
-            gather_ahead=self.gather_ahead,
+            sharding=self.sharding, update_kernel=self.update_kernel,
+            gather=self.gather,
             backward_profile=self.backward_profile)
 
     @property
@@ -137,8 +156,7 @@ class CommPlan:
             bucket_mb = autotune(
                 template_tree, schedule=self.schedule, axes=axes,
                 sizes=sizes, dtype_bytes=self.wire_dtype_bytes,
-                family=family, shard_update=self.shard_update,
-                gather_ahead=self.gather_ahead,
+                family=family, sharding=self.sharding, gather=self.gather,
                 param_dtype_bytes=self.wire_dtype_bytes).bucket_mb
         plan = bucketing.make_plan(template_tree, bucket_mb=bucket_mb,
                                    dtype_bytes=self.wire_dtype_bytes)
@@ -155,21 +173,29 @@ def make(comm_cfg, bucket_plan, *, resolved_bucket_mb: float,
          mesh_axes: Sequence[str], mesh_sizes: Sequence[int],
          shard_axis: str, n_shards: int, strategy: Optional[str] = None,
          overlap: Optional[bool] = None, shard_update: Optional[bool] = None,
-         gather_ahead: Optional[bool] = None) -> CommPlan:
+         gather_ahead: Optional[bool] = None,
+         sharding: Optional[str] = None,
+         gather: Optional[str] = None) -> CommPlan:
     """Build a ``CommPlan`` from a resolved train step's pieces. The
-    ``overlap``/``shard_update``/``gather_ahead`` overrides record the
-    *effective* values (``make_train_step`` downgrades them for 'naive' or
-    replicated paths); ``None`` keeps the config's."""
+    ``overlap``/``sharding``/``gather`` overrides record the *effective*
+    values (``make_train_step`` downgrades them for 'naive' or replicated
+    paths); ``None`` keeps the config's. The boolean ``shard_update``/
+    ``gather_ahead`` overrides are the deprecated spellings and only apply
+    when the enum override is absent."""
     pick = lambda ov, cfg: cfg if ov is None else ov  # noqa: E731
+    if sharding is None and shard_update is not None:
+        sharding = _SHARDING_FOR_BOOL[bool(shard_update)]
+    if gather is None and gather_ahead is not None:
+        gather = "ahead" if gather_ahead else "at_end"
     return CommPlan(
         schedule=strategy or comm_cfg.strategy,
         bucket_mb=float(resolved_bucket_mb),
         requested_bucket_mb=comm_cfg.bucket_mb,
         wire_dtype=comm_cfg.wire_dtype,
         overlap=pick(overlap, comm_cfg.overlap),
-        shard_update=pick(shard_update, comm_cfg.shard_update),
+        shard_update=pick(sharding, comm_cfg.sharding) != "replicated",
         update_kernel=comm_cfg.update_kernel,
-        gather_ahead=pick(gather_ahead, comm_cfg.gather_ahead),
+        gather_ahead=pick(gather, comm_cfg.gather) == "ahead",
         backward_profile=comm_cfg.backward_profile,
         mesh_axes=tuple(mesh_axes),
         mesh_sizes=tuple(int(s) for s in mesh_sizes),
@@ -177,7 +203,9 @@ def make(comm_cfg, bucket_plan, *, resolved_bucket_mb: float,
         bucket_sizes=tuple(int(s) for s in bucket_plan.bucket_sizes),
         slots=tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
                              s.bucket, s.offset)
-                    for s in bucket_plan.slots))
+                    for s in bucket_plan.slots),
+        sharding=pick(sharding, comm_cfg.sharding),
+        gather=pick(gather, comm_cfg.gather))
 
 
 # ----------------------------------------------------------- JSON (de)ser
@@ -189,32 +217,43 @@ def to_dict(plan: CommPlan) -> dict:
 
 
 def from_dict(d: dict) -> CommPlan:
+    """Parse a serialized plan. Version 2 is native; version 1 payloads
+    (pre-``sharding=`` policy API) load compatibly — their boolean
+    ``shard_update``/``gather_ahead`` fields map onto the policy enum
+    (``True`` → 'zero1', gather 'ahead'/'at_end') and the loaded plan is
+    upgraded in place to the current version, so a re-save writes v2."""
     if not isinstance(d, dict) or "version" not in d:
         raise CommPlanError("not a CommPlan payload (no 'version' field)")
-    if d["version"] != PLAN_VERSION:
+    if d["version"] not in (1, PLAN_VERSION):
         raise CommPlanError(
             f"CommPlan version {d['version']!r} is not supported by this "
-            f"build (expected {PLAN_VERSION}) — resume with a matching "
-            f"repro version or re-serialize the plan")
+            f"build (expected {PLAN_VERSION} or the v1 compat form) — "
+            f"resume with a matching repro version or re-serialize the plan")
     try:
         slots = tuple(
             SlotSpec(path, tuple(int(x) for x in shape), int(size),
                      int(padded), int(bucket), int(offset))
             for path, shape, size, padded, bucket, offset in d["slots"])
         req = d["requested_bucket_mb"]
+        if d["version"] == 1:
+            sharding = _SHARDING_FOR_BOOL[bool(d["shard_update"])]
+            gather = "ahead" if d["gather_ahead"] else "at_end"
+        else:
+            sharding, gather = str(d["sharding"]), str(d["gather"])
         return CommPlan(
             schedule=str(d["schedule"]), bucket_mb=float(d["bucket_mb"]),
             requested_bucket_mb=(req if req == "auto" else float(req)),
             wire_dtype=str(d["wire_dtype"]), overlap=bool(d["overlap"]),
-            shard_update=bool(d["shard_update"]),
+            shard_update=sharding != "replicated",
             update_kernel=bool(d["update_kernel"]),
-            gather_ahead=bool(d["gather_ahead"]),
+            gather_ahead=gather == "ahead",
             backward_profile=str(d["backward_profile"]),
             mesh_axes=tuple(d["mesh_axes"]),
             mesh_sizes=tuple(int(s) for s in d["mesh_sizes"]),
             shard_axis=str(d["shard_axis"]), n_shards=int(d["n_shards"]),
             bucket_sizes=tuple(int(s) for s in d["bucket_sizes"]),
-            slots=slots, version=int(d["version"]))
+            slots=slots, sharding=sharding, gather=gather,
+            version=PLAN_VERSION)
     except (KeyError, TypeError, ValueError) as e:
         raise CommPlanError(f"malformed CommPlan payload: {e!r}") from e
 

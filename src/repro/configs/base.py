@@ -8,8 +8,12 @@ same family, as required by the harness contract.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple
+
+SHARDING_LEVELS = ("replicated", "zero1", "zero3")
+GATHER_MODES = ("ahead", "at_end", "per_group")
 
 
 @dataclass(frozen=True)
@@ -28,29 +32,56 @@ class CommConfig:
     ``overlap=True`` (default) issues each bucket's collective from inside
     the backward pass, as soon as its layer group's gradients are complete
     (§III-C.2); ``False`` reproduces the post-backward PR-2 path. With
-    ``shard_update`` the in-backward collective is the reduce-scatter-
+    sharded policies the in-backward collective is the reduce-scatter-
     terminal form (gradient sinks, ``ddp.wrap_params_for_overlap(
     shard_sinks=...)``) — no full reduced gradient ever materializes.
     Ignored by 'xla' and 'naive'.
 
-    ``shard_update=True`` (ZeRO-1; docs/comm.md §Sharded update) stops the
-    gradient collective at the reduce-scatter: each device runs the packed
-    LARS/SGD-M update on its contiguous 1/n shard of the bucket buffers
-    (momentum AND fp32 master shards persist in the train state across
-    steps — ``TrainState.shards``), then all-gathers the bf16 params for
-    the next forward — RS(g)+AG(p) on the wire instead of AR(g), optimizer
-    FLOPs and fp32 optimizer-state memory cut by the shard count. The
-    masters never round-trip through the wire dtype: only the gathered
-    forward copy is quantized. Explicit-DP schedules only (ignored by
+    ``sharding`` is the single parameter-sharding policy knob
+    (docs/comm.md §Sharded update / §ZeRO-3):
+
+    * ``'replicated'`` (default) — every device holds full fp32 params;
+      the gradient collective is an all-reduce.
+    * ``'zero1'`` — the gradient collective stops at the reduce-scatter:
+      each device runs the packed LARS/SGD-M update on its contiguous 1/n
+      shard of the bucket buffers (momentum AND fp32 master shards persist
+      in the train state across steps — ``TrainState.shards``), then
+      all-gathers the wire-dtype params for the forward — RS(g)+AG(p) on
+      the wire instead of AR(g). The masters never round-trip through the
+      wire dtype: only the gathered forward copy is quantized.
+    * ``'zero3'`` — additionally drops the persistent full param replica:
+      ``TrainState.params`` is ``None`` and each bucket group is
+      all-gathered just-in-time inside the forward, consumed, and freed —
+      peak param memory O(N/n) + O(largest bucket group). Evals and
+      checkpoints read through the fp32 master shards
+      (``loop.authoritative_params``).
+
+    Sharded policies need an explicit-DP schedule (ignored by
     'xla'/'naive'); ``update_kernel=True`` routes the shard update through
     the fused ``kernels/lars_update`` Pallas kernel.
 
-    ``gather_ahead=True`` (default; shard_update only) issues the per-
-    bucket param all-gather at the START of the next step's forward, from
-    the persistent shards, so every gather hides under forward compute
-    (``TrainState.params`` then lags the master shards by one update — it
-    is the copy the forward ran on). ``False`` gathers at step end (the
-    PR-4 timeline: fresh ``params``, gather fully exposed).
+    ``gather`` sub-knob — when the param all-gather issues:
+
+    * ``'ahead'`` — zero1 (default): per-bucket AG at the START of the
+      next step's forward, from the persistent shards, so every gather
+      hides under forward compute (``TrainState.params`` then lags the
+      master shards by one update). zero3: the per-group forward gathers
+      are RETAINED for their backward use (no re-gather; transient full
+      wire-dtype footprint within a step, still no persistent replica).
+    * ``'at_end'`` — zero1 only: AG at step end (the PR-4 timeline: fresh
+      ``params``, gather fully exposed).
+    * ``'per_group'`` — zero3 (default there): just-in-time per-group
+      forward gathers, re-gathered for the backward via rematerialization
+      (``jax.checkpoint`` around the loss) so each group's gathered params
+      are freed right after their forward use.
+
+    ``shard_update`` / ``gather_ahead`` are DEPRECATED boolean spellings
+    of the same policies; passing them warns and maps
+    (``shard_update=True`` ⇒ ``sharding='zero1'``,
+    ``gather_ahead=False`` ⇒ ``gather='at_end'``) so old configs resolve
+    bit-identically. After construction both fields always hold the
+    resolved booleans (``shard_update == sharding != 'replicated'``,
+    ``gather_ahead == gather == 'ahead'``) for backward-compatible reads.
 
     ``backward_profile`` selects how the autotuner apportions backward
     time over bucket groups when ``bucket_mb='auto'``: 'model' (the
@@ -62,10 +93,12 @@ class CommConfig:
     wire_dtype: str = "bf16"     # bf16 | f32 on the wire (paper §IV)
     use_kernel: bool = False     # Pallas ring-step fold (comm/ring_kernel)
     overlap: bool = True         # issue bucket collectives inside backward
-    shard_update: bool = False   # ZeRO-1: RS(g) + sharded update + AG(p)
+    shard_update: Optional[bool] = None   # DEPRECATED: use sharding=
     update_kernel: bool = False  # fused lars_update Pallas kernel on shards
-    gather_ahead: bool = True    # AG(p) at next step's forward, not step end
+    gather_ahead: Optional[bool] = None   # DEPRECATED: use gather=
     backward_profile: str = "model"   # 'model' | 'measured' (autotune)
+    sharding: Optional[str] = None    # 'replicated' | 'zero1' | 'zero3'
+    gather: Optional[str] = None      # 'ahead' | 'at_end' | 'per_group'
 
     def __post_init__(self):
         assert self.wire_dtype in ("bf16", "f32"), self.wire_dtype
@@ -75,6 +108,58 @@ class CommConfig:
             assert self.bucket_mb == "auto", self.bucket_mb
         else:
             assert self.bucket_mb > 0, self.bucket_mb
+        sharding, gather = self.sharding, self.gather
+        # -- resolve the sharding level ---------------------------------
+        if sharding is None:
+            if self.shard_update is not None:
+                warnings.warn(
+                    "CommConfig(shard_update=...) is deprecated; use "
+                    "sharding='zero1' (True) / 'replicated' (False)",
+                    DeprecationWarning, stacklevel=3)
+            sharding = "zero1" if self.shard_update else "replicated"
+        else:
+            if sharding not in SHARDING_LEVELS:
+                raise ValueError(
+                    f"sharding={sharding!r} not in {SHARDING_LEVELS}")
+            if (self.shard_update is not None
+                    and self.shard_update != (sharding != "replicated")):
+                raise ValueError(
+                    f"conflicting CommConfig: sharding={sharding!r} but "
+                    f"deprecated shard_update={self.shard_update} — drop "
+                    f"the boolean")
+        # -- resolve the gather issue point -----------------------------
+        if gather is None:
+            if self.gather_ahead is not None:
+                warnings.warn(
+                    "CommConfig(gather_ahead=...) is deprecated; use "
+                    "gather='ahead' (True) / 'at_end' (False)",
+                    DeprecationWarning, stacklevel=3)
+                gather = "ahead" if self.gather_ahead else "at_end"
+            else:
+                gather = "per_group" if sharding == "zero3" else "ahead"
+        else:
+            if gather not in GATHER_MODES:
+                raise ValueError(f"gather={gather!r} not in {GATHER_MODES}")
+            if (self.gather_ahead is not None
+                    and self.gather_ahead != (gather == "ahead")):
+                raise ValueError(
+                    f"conflicting CommConfig: gather={gather!r} but "
+                    f"deprecated gather_ahead={self.gather_ahead} — drop "
+                    f"the boolean")
+        if sharding == "zero3" and gather == "at_end":
+            raise ValueError(
+                "sharding='zero3' has no step-end gather — use "
+                "gather='per_group' (re-gather in backward, default) or "
+                "'ahead' (retain the forward copy)")
+        if sharding != "zero3" and gather == "per_group":
+            raise ValueError(
+                "gather='per_group' is the zero3 just-in-time policy — "
+                f"meaningless with sharding={sharding!r}")
+        object.__setattr__(self, "sharding", sharding)
+        object.__setattr__(self, "gather", gather)
+        # resolved booleans stay readable for backward compatibility
+        object.__setattr__(self, "shard_update", sharding != "replicated")
+        object.__setattr__(self, "gather_ahead", gather == "ahead")
 
 
 @dataclass(frozen=True)

@@ -66,6 +66,23 @@ class BucketPlan:
         """Wire payload per bucket (padded elements x wire dtype width)."""
         return tuple(s * dtype_bytes for s in self.bucket_sizes)
 
+    @property
+    def group_elems(self) -> Tuple[int, ...]:
+        """Unpadded f32 parameter elements per bucket group — what a ZeRO-3
+        just-in-time gather materializes (the unpacked leaves), as opposed
+        to ``bucket_sizes`` (the CHUNK-padded wire buffer it unpacks
+        from). Drives the peak-live-param accounting."""
+        out = [0] * self.n_buckets
+        for slot in self.slots:
+            out[slot.bucket] += slot.size
+        return tuple(out)
+
+    @property
+    def max_group_elems(self) -> int:
+        """Largest group's unpadded element count — the O(largest bucket
+        group) term in the ZeRO-3 peak-memory bound."""
+        return max(self.group_elems) if self.slots else 0
+
 
 def _path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))

@@ -287,6 +287,43 @@ def gather_ahead_params(shards, plan: "bucketing.BucketPlan", *,
 
 
 # --------------------------------------------------------------------------
+# ZeRO-3 just-in-time gather (CommConfig.sharding='zero3'; docs/comm.md)
+
+def jit_gather_params(shards, plan: "bucketing.BucketPlan", *,
+                      shard_axis: str, wire_dtype=jnp.bfloat16,
+                      tracer=None):
+    """ZeRO-3 gather: rebuild the forward params from the persistent master
+    shards with per-GROUP lifetimes — called *inside* the differentiated
+    function, so no full replica ever lives in ``TrainState``.
+
+    The memory contract is the difference from ``all_gather_params``: that
+    path keeps every bucket's wire buffer live until one tree-wide unpack
+    (a full wire image, O(N) scratch). Here each group's buffer is unpacked
+    into its own fp32 leaves immediately, so a group's wire scratch dies as
+    soon as its leaves exist, and the leaves themselves die once the last
+    layer of that group has consumed them — XLA's liveness sees O(largest
+    bucket group), not O(N). Each group's all-gather has only that group's
+    layers as consumers, so the latency-hiding scheduler streams gather
+    ``g`` under the forward compute of the groups already gathered (the
+    forward walks groups in REVERSE packing order: bucket 0 holds the last
+    layers). ``tracer`` plants ``ag[g<gi>]`` spans — a distinct name from
+    the ZeRO-1 ``ag[b<gi>]`` step-boundary gathers so drift rows can tell
+    the timelines apart. Must be called inside shard_map with the shards'
+    local view."""
+    from repro.comm import primitives as prim
+    leaves_slot_order = []
+    for gi, group in enumerate(plan.groups):
+        wire = grads_to_comm(shards[gi], dtype=wire_dtype)
+        obs_trace.mark(tracer, f"ag[g{gi}]", "B", [wire], bucket=gi)
+        buf = prim.ring_all_gather(wire, shard_axis, plan.bucket_sizes[gi])
+        obs_trace.mark(tracer, f"ag[g{gi}]", "E", [buf], bucket=gi)
+        leaves_slot_order.extend(
+            bucketing.unpack_group(buf, group, dtype=jnp.float32))
+    return jax.tree_util.tree_unflatten(plan.treedef,
+                                        list(reversed(leaves_slot_order)))
+
+
+# --------------------------------------------------------------------------
 # backward-profile probes (comm/autotune.measure_backward_profile)
 
 def _probe_bucket_fn(group_idx: int, probe):

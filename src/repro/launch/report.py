@@ -181,44 +181,56 @@ def autotune_section(arch: str = "resnet50") -> str:
 
 
 def shard_update_section(arch: str = "resnet50") -> str:
-    """ZeRO-1 byte/time accounting (docs/comm.md §Sharded update): per
-    schedule at its autotuned bucket size, the all-reduce timeline
-    (AR(g) + full update) vs the sharded one (in-backward RS(g) +
-    update/n + AG(bf16 p)) at both gather issue points — step-end vs
-    gather-ahead (AG hidden under the next step's forward)."""
-    from repro.comm import available
+    """Sharding-policy byte/time accounting (docs/comm.md): per schedule
+    at its autotuned bucket size, the replicated timeline (AR(g) + full
+    update) vs sharding='zero1' (in-backward RS(g) + update/n + AG(p) at
+    both gather issue points) vs sharding='zero3' (just-in-time AG in the
+    forward; gather='per_group' re-gathers in the backward, 'ahead'
+    retains), plus the zero3-vs-zero1 peak-param-memory reduction
+    (``comm.cost.param_memory_reduction``, n-independent)."""
+    from repro.comm import available, cost as cost_mod
     from repro.comm.autotune import autotune
     from repro.configs import get_config
+    from repro.core import bucketing
     from repro.models.registry import build_model
 
     cfg = get_config(arch)
     model = build_model(cfg)
-    rows = [f"### Sharded-update accounting ({arch}, bf16 wire): "
-            "AR(g)+update vs RS(g)+update/n+AG(p), AG at step end vs "
-            "gather-ahead\n",
-            "| mesh | schedule | bucket MB | AR t_step | shard t_step "
-            "(AG@end) | shard t_step (gather-ahead) | update | gather "
-            "| Δ step |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    rows = [f"### Sharding-policy accounting ({arch}, bf16 wire): "
+            "replicated vs zero1 (RS+update/n+AG) vs zero3 (AG in "
+            "forward)\n",
+            "| mesh | schedule | bucket MB | replicated | zero1 at_end "
+            "| zero1 ahead | zero3 per_group | zero3 ahead | update "
+            "| peak-mem ↓ |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
     for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
         for s in available():
             ar = autotune(model.param_pd, schedule=s, axes=axes,
                           sizes=sizes, family=cfg.family)
             sh = autotune(model.param_pd, schedule=s, axes=axes,
-                          sizes=sizes, family=cfg.family, shard_update=True)
-            # AG@end priced on the SAME plan as the gather-ahead row, so
-            # the t_step delta is purely the gather issue point
-            end = autotune(model.param_pd, schedule=s, axes=axes,
-                           sizes=sizes, family=cfg.family,
-                           shard_update=True, gather_ahead=False,
-                           candidates=(sh.bucket_mb,))
-            d = 100 * (sh.sim.t_step_s - ar.sim.t_step_s) / ar.sim.t_step_s
+                          sizes=sizes, family=cfg.family, sharding="zero1")
+            # the alternative policies priced on the SAME plan as the
+            # zero1/ahead row, so the t_step deltas are purely the gather
+            # issue point / sharding level
+            same = dict(schedule=s, axes=axes, sizes=sizes,
+                        family=cfg.family, candidates=(sh.bucket_mb,))
+            end = autotune(model.param_pd, sharding="zero1",
+                           gather="at_end", **same)
+            z3 = autotune(model.param_pd, sharding="zero3",
+                          gather="per_group", **same)
+            z3r = autotune(model.param_pd, sharding="zero3",
+                           gather="ahead", **same)
+            plan = bucketing.make_plan(model.param_pd,
+                                       bucket_mb=sh.bucket_mb)
+            red = cost_mod.param_memory_reduction(
+                plan, cost_mod.shard_axis_size(axes, sizes)[1])
             rows.append(
                 f"| {tag} | {s} | {sh.bucket_mb:g} "
                 f"| {fmt_t(ar.sim.t_step_s)} | {fmt_t(end.sim.t_step_s)} "
-                f"| {fmt_t(sh.sim.t_step_s)} "
+                f"| {fmt_t(sh.sim.t_step_s)} | {fmt_t(z3.sim.t_step_s)} "
+                f"| {fmt_t(z3r.sim.t_step_s)} "
                 f"| {fmt_t(ar.sim.t_update_s)}→{fmt_t(sh.sim.t_update_s)} "
-                f"| {fmt_t(sh.sim.t_gather_s)} | {d:+.1f}% |")
+                f"| {100 * red:.1f}% |")
     return "\n".join(rows)
 
 

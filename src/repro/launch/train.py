@@ -59,17 +59,29 @@ def main(argv=None):
     ap.add_argument("--no-overlap", action="store_true",
                     help="post-backward collectives instead of issuing "
                          "each bucket's all-reduce inside the backward")
+    ap.add_argument("--sharding", default=None,
+                    choices=["replicated", "zero1", "zero3"],
+                    help="param/optimizer sharding policy: 'replicated' "
+                         "(default) trains on a full replica; 'zero1' "
+                         "reduce-scatters grads and shards the update; "
+                         "'zero3' additionally drops the persistent param "
+                         "replica and all-gathers each bucket group just "
+                         "in time during the forward (docs/comm.md)")
+    ap.add_argument("--gather", default=None,
+                    choices=["ahead", "at_end", "per_group"],
+                    help="param gather issue point: 'ahead' hides the "
+                         "zero1 all-gather under the next forward (zero1 "
+                         "default; under zero3 it retains the forward "
+                         "copies for the backward), 'at_end' gathers at "
+                         "step end, 'per_group' (zero3 default) re-gathers "
+                         "each group for its backward via remat")
     ap.add_argument("--shard-update", action="store_true",
-                    help="ZeRO-1 sharded update: stop at the reduce-"
-                         "scatter, run the packed LARS update on 1/n of "
-                         "the buffers, all-gather the updated params")
+                    help="DEPRECATED: same as --sharding zero1")
     ap.add_argument("--update-kernel", action="store_true",
                     help="fused lars_update Pallas kernel for the sharded "
                          "update (interpret-mode on CPU)")
     ap.add_argument("--no-gather-ahead", action="store_true",
-                    help="issue the sharded path's param all-gather at "
-                         "step end instead of hiding it under the next "
-                         "step's forward (gather-ahead, the default)")
+                    help="DEPRECATED: same as --gather at_end")
     ap.add_argument("--backward-profile", default="model",
                     choices=["model", "measured"],
                     help="bucket autotuner backward-time source: FLOPs "
@@ -149,9 +161,32 @@ def _run(args, *, reg: obs_metrics.Registry,
     batch_fn = make_batch_fn(cfg, shape, seed=args.seed, kind=args.data,
                              mesh=mesh)
     from repro.configs.base import CommConfig
-    if args.shard_update and args.comm in ("xla", "naive"):
+    # deprecated boolean flags: warn and map onto the policy enum, exactly
+    # like the CommConfig field shims (one release of compat)
+    sharding, gather = args.sharding, args.gather
+    if args.shard_update:
+        reg.event("launch_deprecated",
+                  "--shard-update is deprecated; use --sharding zero1",
+                  where=WHERE)
+        if sharding is None:
+            sharding = "zero1"
+        elif sharding == "replicated":
+            raise SystemExit(
+                "--shard-update conflicts with --sharding replicated — "
+                "drop the deprecated flag")
+    if args.no_gather_ahead:
+        reg.event("launch_deprecated",
+                  "--no-gather-ahead is deprecated; use --gather at_end",
+                  where=WHERE)
+        if gather is None:
+            gather = "at_end"
+        elif gather == "ahead":
+            raise SystemExit(
+                "--no-gather-ahead conflicts with --gather ahead — "
+                "drop the deprecated flag")
+    if sharding in ("zero1", "zero3") and args.comm in ("xla", "naive"):
         raise SystemExit(
-            f"--shard-update needs an explicit-DP schedule "
+            f"--sharding {sharding} needs an explicit-DP schedule "
             f"(--comm {{bucketed,psum,ring,hierarchical,2d_torus,dbtree}}), "
             f"not {args.comm!r} — it would silently train replicated")
     if args.backward_profile == "measured" and args.bucket_mb != "auto":
@@ -161,10 +196,9 @@ def _run(args, *, reg: obs_metrics.Registry,
                   where=WHERE)
     comm_cfg = CommConfig(strategy=args.comm, bucket_mb=args.bucket_mb,
                           overlap=not args.no_overlap,
-                          shard_update=args.shard_update,
                           update_kernel=args.update_kernel,
-                          gather_ahead=not args.no_gather_ahead,
-                          backward_profile=args.backward_profile)
+                          backward_profile=args.backward_profile,
+                          sharding=sharding, gather=gather)
     saved_plan = None
     if args.resume_elastic:
         if not args.ckpt_dir:
@@ -202,12 +236,17 @@ def _run(args, *, reg: obs_metrics.Registry,
                   f"autotuned bucket plan: {t.bucket_mb:g}MB x "
                   f"{t.n_buckets} buckets ({t.sim.mode}), predicted overlap "
                   f"eff {t.sim.overlap_eff:.2f}", where=WHERE)
-    if getattr(train_step, "shard_update", False):
+    if getattr(train_step, "sharding", "replicated") != "replicated":
         rs_at = "in-backward" if train_step.overlap else "post-backward"
-        ag_at = ("gather-ahead (hidden under next forward)"
-                 if train_step.gather_ahead else "step-end")
+        ag_at = {"ahead": ("retained forward copies"
+                           if train_step.sharding == "zero3" else
+                           "gather-ahead (hidden under next forward)"),
+                 "at_end": "step-end",
+                 "per_group": "per-group just-in-time (remat re-gather)",
+                 }[train_step.gather]
         reg.event("shard_update_plan",
-                  f"ZeRO-1 sharded update: {train_step.n_shards} shards "
+                  f"{train_step.sharding} sharded update: "
+                  f"{train_step.n_shards} shards "
                   f"over '{train_step.shard_axis}', {rs_at} reduce-scatter, "
                   f"{ag_at} param all-gather", where=WHERE)
     eval_step = make_eval_step(model, mesh=mesh) if args.eval_every else None
@@ -216,7 +255,9 @@ def _run(args, *, reg: obs_metrics.Registry,
     state = init_state(model, args.seed, mesh, opt_kind=args.optimizer,
                        sharded_plan=train_step.bucket_plan if sharded
                        else None,
-                       n_shards=train_step.n_shards if sharded else 1)
+                       n_shards=train_step.n_shards if sharded else 1,
+                       materialize_params=getattr(train_step, "sharding",
+                                                  "replicated") != "zero3")
     if args.resume_elastic:
         from repro.train import elastic
         new_n = train_step.n_shards if sharded else 1

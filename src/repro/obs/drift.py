@@ -56,15 +56,25 @@ def predicted_span_times(plan: CommPlan, *,
                          links: Optional[Dict[str, cost.Link]] = None
                          ) -> Dict[str, float]:
     """The CommPlan's predicted per-bucket comm-span durations, keyed by
-    the tracer's span names. Sharded plans predict the RS-terminal form
-    per bucket plus the param all-gather (``ag[bi]``, param bytes on the
-    wire dtype); replicated plans predict the full all-reduce
-    (``ar[bi]``). Exactly the spans ``core/ddp.py`` plants."""
+    the tracer's span names. ``sharding='zero1'`` plans predict the
+    RS-terminal form per bucket plus the step-boundary param all-gather
+    (``ag[bi]``, param bytes on the wire dtype); ``sharding='zero3'``
+    predicts the same RS plus the just-in-time per-GROUP forward gather
+    (``ag[gi]`` — with ``gather='per_group'`` the remat re-gather fires
+    the same span name in the backward, so its measured [min B, max E]
+    window covers both passes and the row is a trend, not a duration
+    match); replicated plans predict the full all-reduce (``ar[bi]``).
+    Exactly the spans ``core/ddp.py`` plants."""
     out: Dict[str, float] = {}
     axes, sizes = plan.mesh_axes, plan.mesh_sizes
     for b, elems in enumerate(plan.bucket_sizes):
         payload = elems * plan.wire_dtype_bytes
-        if plan.shard_update:
+        if plan.sharding == "zero3":
+            out[f"rs[b{b}]"] = cost.predict_reduce_scatter(
+                plan.schedule, axes, sizes, payload, links=links).time_s
+            out[f"ag[g{b}]"] = cost.predict_all_gather(
+                axes, sizes, payload, links=links).time_s
+        elif plan.shard_update:
             out[f"rs[b{b}]"] = cost.predict_reduce_scatter(
                 plan.schedule, axes, sizes, payload, links=links).time_s
             out[f"ag[b{b}]"] = cost.predict_all_gather(

@@ -7,10 +7,13 @@ reusable span instrumentation:
 
 * :func:`mark` plants one begin/end phase probe; the ddp hooks
   (``wrap_params_for_overlap`` group boundaries, the reduce-scatter sink
-  fire, the gather-ahead all-gathers, ``reduce_scatter_grads``,
-  ``allreduce_grads``) and the train step (forward/backward/update
-  windows) call it with ``tracer=None`` as a zero-cost no-op, so an
-  untraced step's graph is unchanged.
+  fire, the gather-ahead all-gathers ``ag[bi]``, the ZeRO-3 just-in-time
+  per-group gathers ``ag[gi]`` (``jit_gather_params`` — under
+  ``gather='per_group'`` the backward's rematerialized forward fires the
+  same probes again, so the assembled span stretches across both passes),
+  ``reduce_scatter_grads``, ``allreduce_grads``) and the train step
+  (forward/backward/update windows) call it with ``tracer=None`` as a
+  zero-cost no-op, so an untraced step's graph is unchanged.
 * :class:`Tracer` collects the fired probes. The training loop owns the
   step windows: ``begin_step()`` before dispatch, ``end_step(step)``
   after ``block_until_ready`` — which drains the async callbacks

@@ -85,7 +85,7 @@ def load_resharded(ckpt_dir: str, template: TrainState,
         if template.shards is not None:
             raise ElasticResumeError(
                 "checkpoint is non-sharded but the resume template carries "
-                "ZeRO-1 shards — resume with shard_update disabled, or "
+                "ZeRO shards — resume with sharding='replicated', or "
                 "re-checkpoint from a sharded run")
         return ckpt.load(template, ckpt_dir, tag=tag)
     if template.shards is None:
@@ -100,7 +100,12 @@ def load_resharded(ckpt_dir: str, template: TrainState,
             f"packing layout (bucket boundaries, shard count) is unknown — "
             f"elastic resume needs checkpoints saved with comm_plan=... "
             f"(train loop default since the elastic layer)")
-    old_plan = comm_plan.bucket_plan(template.params)
+    # a ZeRO-3 template has params=None; rebuild a shaped tree from its
+    # shards — bucket_plan only needs the treedef/shapes, not the values
+    tmpl_tree = (template.params if template.params is not None else
+                 full_params_from_shards(template.shards, new_plan,
+                                         new_n_shards))
+    old_plan = comm_plan.bucket_plan(tmpl_tree)
     old_n = comm_plan.n_shards
 
     def bufs(prefix, n_buckets):
@@ -121,7 +126,11 @@ def load_resharded(ckpt_dir: str, template: TrainState,
     mom = list(init_packed_shards(mom_tree, new_plan, new_n_shards))
     _check_like(template.shards, shards, "shards", new_n_shards)
     _check_like(template.mom, mom, "mom", new_n_shards)
-    params = full_params_from_shards(shards, new_plan, new_n_shards)
+    # the committed layout carries the policy: a ZeRO-3 template
+    # (params=None) resumes without materializing a full replica — the
+    # resharded masters alone are the state
+    params = (full_params_from_shards(shards, new_plan, new_n_shards)
+              if template.params is not None else None)
     bn = (ckpt._restore("bn", template.bn_state, data)
           if template.bn_state is not None else None)
     return TrainState(jnp.asarray(meta["step"], jnp.int32), params,
@@ -141,9 +150,12 @@ def _check_like(want, got, name, n_shards):
 
 def make_template(model, new_plan: bucketing.BucketPlan,
                   new_n_shards: int, *, seed: int = 0, mesh=None,
-                  opt_kind: str = "lars") -> TrainState:
+                  opt_kind: str = "lars",
+                  materialize_params: bool = True) -> TrainState:
     """Convenience: a freshly-initialized sharded state for the new mesh —
-    exactly what :func:`load_resharded` wants as ``template``."""
+    exactly what :func:`load_resharded` wants as ``template``.
+    ``materialize_params=False`` builds the ZeRO-3 form (params=None)."""
     from repro.train.state import init_state
     return init_state(model, seed, mesh, opt_kind=opt_kind,
-                      sharded_plan=new_plan, n_shards=new_n_shards)
+                      sharded_plan=new_plan, n_shards=new_n_shards,
+                      materialize_params=materialize_params)

@@ -52,21 +52,25 @@ def mlperf_log(tag: str, value=None):
 
 
 def authoritative_params(state: TrainState, train_step: Callable):
-    """The params evals must read. A ZeRO-1 ``shard_update`` state carries
-    its fp32 masters in ``state.shards``; with gather-ahead (the default)
-    ``state.params`` is the forward copy, one update BEHIND the masters —
-    so reconstruct the full params from the shards instead of silently
-    evaluating a stale step. (``train()`` uses the jit-cached
+    """The params evals must read. A sharded state
+    (``sharding='zero1'|'zero3'``) carries its fp32 masters in
+    ``state.shards``; under 'zero1' with gather-ahead (the default)
+    ``state.params`` is the forward copy, one update BEHIND the masters,
+    and under 'zero3' ``state.params`` is None — so reconstruct the full
+    params from the shards instead of silently evaluating a stale (or
+    absent) step. (``train()`` uses the jit-cached
     :func:`make_params_reader` form of this.)"""
     return make_params_reader(train_step)(state)
 
 
 def make_params_reader(train_step: Callable) -> Callable:
-    """Build the authoritative-params reader ONCE: for sharded steps a
-    single jitted shards->params gather reused across every eval (the old
-    per-eval retrace re-staged the full unpack each time); for replicated
-    steps, plain attribute access."""
-    if getattr(train_step, "shard_update", False):
+    """Build the authoritative-params reader ONCE: for sharded steps
+    (any non-replicated ``train_step.sharding``) a single jitted
+    shards->params gather reused across every eval (the old per-eval
+    retrace re-staged the full unpack each time); for replicated steps,
+    plain attribute access."""
+    if getattr(train_step, "sharding", "replicated") != "replicated" or \
+            getattr(train_step, "shard_update", False):
         from repro.train.state import full_params_from_shards
         plan, n = train_step.bucket_plan, train_step.n_shards
         gather = jax.jit(

@@ -12,14 +12,16 @@ from repro.core import lars, pinit
 
 class TrainState(NamedTuple):
     step: jax.Array
-    params: Any          # fp32 master; ZeRO-1: the gathered forward copy
-    mom: Any             # fp32 momentum buffers; ZeRO-1: packed shard bufs
+    params: Any          # fp32 master; ZeRO-1: the gathered forward copy;
+                         # ZeRO-3: None — params exist only transiently
+                         # inside the step (ddp.jit_gather_params)
+    mom: Any             # fp32 momentum buffers; sharded: packed shard bufs
     bn_state: Any = None # resnet only
-    shards: Any = None   # ZeRO-1: persistent fp32 master shards, one flat
+    shards: Any = None   # ZeRO-1/3: persistent fp32 master shards, one flat
                          # buffer per bucket in the device-major rotated
                          # layout (bucketing.rotate_to_shards). When set,
                          # these are the authoritative masters; with
-                         # gather_ahead the ``params`` copy lags them by
+                         # gather='ahead' the ``params`` copy lags them by
                          # one update (it is what the last forward ran on).
 
 
@@ -67,17 +69,26 @@ def full_params_from_shards(shards, plan, n_shards: int = 1):
 
 
 def init_state(model, seed: int = 0, mesh=None, opt_kind: str = "lars",
-               sharded_plan=None, n_shards: int = 1) -> TrainState:
+               sharded_plan=None, n_shards: int = 1,
+               materialize_params: bool = True) -> TrainState:
     """``sharded_plan`` (a ``BucketPlan``, typically
-    ``train_step.bucket_plan``) switches the momentum leaves to the ZeRO-1
-    packed sharded layout expected by ``CommConfig.shard_update`` steps
-    and materializes the persistent master shards."""
+    ``train_step.bucket_plan``) switches the momentum leaves to the packed
+    sharded layout expected by ``CommConfig.sharding='zero1'|'zero3'``
+    steps and materializes the persistent master shards.
+    ``materialize_params=False`` (the ZeRO-3 state) drops the full
+    ``params`` replica after packing the shards — every full-params read
+    must then go through ``full_params_from_shards`` (or the loop's
+    ``authoritative_params`` reader)."""
     params = pinit.materialize(model.param_pd, seed, mesh)
     shards = None
     if sharded_plan is not None:
         mom = init_packed_momentum(sharded_plan, n_shards)
         shards = init_packed_shards(params, sharded_plan, n_shards)
+        if not materialize_params:
+            params = None
     else:
+        assert materialize_params, \
+            "materialize_params=False requires a sharded_plan (ZeRO-3)"
         mom = lars.init_momentum(params, opt_kind)
     bn = None
     if model.bn_state_pd is not None:

@@ -86,13 +86,19 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     ``comm`` is either a strategy name ('xla' | 'naive' | any schedule in
     ``repro.comm.registry``) or a full ``configs.base.CommConfig``, which
     then also carries the bucket_mb ('auto' = autotuned) / wire dtype /
-    kernel / overlap / shard_update (ZeRO-1) / backward_profile knobs.
-    With ``CommConfig.shard_update`` the state must carry the packed
-    sharded momentum AND the persistent fp32 master shards
+    kernel / overlap / sharding policy / backward_profile knobs.
+    With ``CommConfig.sharding='zero1'|'zero3'`` the state must carry the
+    packed sharded momentum AND the persistent fp32 master shards
     (``train.state.init_state(..., sharded_plan=train_step.bucket_plan,
-    n_shards=train_step.n_shards)``); the returned state's ``params`` is
-    the gathered forward copy — with ``gather_ahead`` (default) it lags
-    the authoritative ``shards`` by one update.
+    n_shards=train_step.n_shards)``). Under 'zero1' the returned state's
+    ``params`` is the gathered forward copy — with ``gather='ahead'``
+    (default) it lags the authoritative ``shards`` by one update. Under
+    'zero3' the state carries NO ``params`` (None): the forward rebuilds
+    them per bucket group just-in-time (``ddp.jit_gather_params``) and
+    ``gather='per_group'`` (default) re-gathers each group for its
+    backward via rematerialization, while ``gather='ahead'`` retains the
+    forward copies through the backward (faster, more peak memory). Full
+    params are read through ``train.loop.make_params_reader``.
     ``profile_batch`` (one real batch) enables
     ``backward_profile='measured'`` for the autotuner.
 
@@ -115,6 +121,11 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         return TrainState(state.step + 1, params, mom, new_bn), metrics
 
     if comm == "xla":
+        assert comm_cfg.sharding != "zero3", (
+            "sharding='zero3' needs the explicit-DDP path (a schedule from "
+            "repro.comm.registry), not comm='xla' — GSPMD owns the param "
+            "layout there (use FSDP PartitionSpecs instead)")
+
         def train_step(state: TrainState, batch):
             p_in = (cast_to_compute(state.params) if comm_dtype == "bf16"
                     else state.params)
@@ -157,16 +168,19 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     # mesh-free. Values are unchanged: constraints only place data.
     loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=None)
 
-    # ZeRO-1 sharded update (docs/comm.md): shard over the innermost
+    # ZeRO-1/3 sharded update (docs/comm.md): shard over the innermost
     # non-trivial mesh axis — the same rule the scatter schedules
-    # (comm.schedules.shard_axis) and the cost model apply
+    # (comm.schedules.shard_axis) and the cost model apply. 'naive' has no
+    # bucket plan to shard against, so it downgrades to replicated.
     from repro.comm.cost import shard_axis_size
-    shard_update = comm_cfg.shard_update and comm != "naive"
+    sharding = comm_cfg.sharding if comm != "naive" else "replicated"
+    shard_update = sharding != "replicated"
+    gather_mode = comm_cfg.gather if shard_update else "at_end"
     shard_axis, n_shards = shard_axis_size(
         axes, tuple(mesh.shape[a] for a in axes))
     if shard_update:
         assert opt_cfg.kind in ("lars", "sgdm") and not opt_cfg.nesterov, \
-            f"shard_update supports lars/sgdm, not {opt_cfg.kind!r}"
+            f"sharding={sharding!r} supports lars/sgdm, not {opt_cfg.kind!r}"
 
     profile = None
     if (bucket_mb == "auto" and comm != "naive"
@@ -186,8 +200,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                 model.param_pd, schedule=comm, axes=axes,
                 sizes=tuple(mesh.shape[a] for a in axes),
                 dtype_bytes=wire_bytes, family=model.cfg.family,
-                profile=profile, shard_update=shard_update,
-                gather_ahead=comm_cfg.gather_ahead,
+                profile=profile, sharding=sharding, gather=gather_mode,
                 param_dtype_bytes=wire_bytes)
             bucket_mb = tuned.bucket_mb
     plan = bucketing.make_plan(jax.tree.map(
@@ -200,7 +213,9 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     # With shard_update the in-backward collective is the reduce-scatter-
     # terminal form and the shards ride out as gradient-sink cotangents.
     overlap = comm_cfg.overlap and comm != "naive"
-    gather_ahead = comm_cfg.gather_ahead and shard_update
+    # gather_ahead = the step-START full prefetch, a ZeRO-1-only notion:
+    # zero3's 'ahead' means retain-through-backward inside the step
+    gather_ahead = gather_mode == "ahead" and sharding == "zero1"
 
     def sharded_step(state: TrainState, batch):
         # gather-ahead (the default): rebuild this step's forward params
@@ -267,7 +282,73 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         return TrainState(state.step + 1, new_params, m_shards, new_bn,
                           p_shards), metrics
 
+    def zero3_step(state: TrainState, batch):
+        # ZeRO-3: no persistent params anywhere — the forward re-creates
+        # each bucket group's fp32 leaves from the master shards just in
+        # time (ddp.jit_gather_params) and XLA's liveness frees them after
+        # the group's last consumer. gather='per_group' additionally wraps
+        # the whole gathered forward in jax.checkpoint, so the backward's
+        # rematerialization re-runs the per-group gathers instead of
+        # keeping the forward copies as residuals (FSDP semantics with
+        # full activation checkpointing: 2x forward compute, O(largest
+        # group) params live in the backward too); gather='ahead' retains
+        # the forward copies as ordinary residuals.
+        obs_trace.mark(tracer, "forward", "B", list(state.shards)[:1],
+                       cat="compute")
+        if overlap:
+            sinks = ddp.make_shard_sinks(plan, n_shards)
+
+            def sink_loss3(sks, shards, b, bn):
+                params = ddp.jit_gather_params(
+                    shards, plan, shard_axis=shard_axis, wire_dtype=wire,
+                    tracer=tracer)
+                p = ddp.wrap_params_for_overlap(
+                    params, plan, strategy=comm, axes=axes, comm_dtype=wire,
+                    use_kernel=comm_cfg.use_kernel, shard_sinks=sks,
+                    tracer=tracer)
+                return loss_fn(p, b, bn)
+
+            inner = (jax.checkpoint(sink_loss3)
+                     if gather_mode == "per_group" else sink_loss3)
+            (loss_val, (metrics, new_bn)), g_shards = jax.value_and_grad(
+                inner, has_aux=True)(sinks, state.shards, batch,
+                                     state.bn_state)
+            g_shards = list(g_shards)
+            obs_trace.mark(tracer, "backward", "E", g_shards, cat="compute")
+        else:
+            # non-overlapped fallback: gather outside the differentiated
+            # function (the full tree is a step-transient, still never in
+            # TrainState) and scatter after the backward. Remat would not
+            # cover the gathers here, so 'per_group' degrades to retain.
+            params = ddp.jit_gather_params(
+                state.shards, plan, shard_axis=shard_axis, wire_dtype=wire,
+                tracer=tracer)
+            (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, state.bn_state)
+            obs_trace.mark(tracer, "backward", "E",
+                           jax.tree.leaves(grads), cat="compute")
+            g_shards = ddp.reduce_scatter_grads(
+                grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
+                use_kernel=comm_cfg.use_kernel, tracer=tracer)
+        obs_trace.mark(tracer, "forward", "E", [loss_val], cat="compute")
+        obs_trace.mark(tracer, "backward", "B", [loss_val], cat="compute")
+        if new_bn is not None:
+            new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
+        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        lr = schedule(state.step)
+        obs_trace.mark(tracer, "update", "B", g_shards, cat="compute")
+        p_shards, m_shards = lars.sharded_update_from_shards(
+            list(state.shards), g_shards, list(state.mom), lr, opt_cfg,
+            plan, shard_axis=shard_axis, n_shards=n_shards,
+            update_kernel=comm_cfg.update_kernel)
+        obs_trace.mark(tracer, "update", "E", p_shards, cat="compute")
+        metrics = dict(metrics, lr=lr)
+        return TrainState(state.step + 1, None, m_shards, new_bn,
+                          p_shards), metrics
+
     def local_step(state: TrainState, batch):
+        if sharding == "zero3":
+            return zero3_step(state, batch)
         if shard_update:
             return sharded_step(state, batch)
         obs_trace.mark(tracer, "forward", "B",
@@ -314,7 +395,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         state_spec = jax.tree.map(lambda _: P(), state)
         if shard_update:
             assert state.shards is not None, (
-                "shard_update=True needs the persistent-shard state: "
+                f"sharding={sharding!r} needs the persistent-shard state: "
                 "init_state(..., sharded_plan=train_step.bucket_plan, "
                 "n_shards=train_step.n_shards)")
             # momentum + master shards persist sharded: dim 0 partitioned
@@ -334,7 +415,9 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     train_step.bucket_mb = bucket_mb
     train_step.tuned = tuned
     train_step.overlap = overlap
-    train_step.shard_update = shard_update
+    train_step.sharding = sharding
+    train_step.gather = gather_mode
+    train_step.shard_update = shard_update      # deprecated boolean views
     train_step.gather_ahead = gather_ahead
     train_step.shard_axis = shard_axis
     train_step.n_shards = n_shards
@@ -342,14 +425,12 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     # serializable CommPlan (docs/elastic.md): saved beside every
     # checkpoint; elastic resume rebuilds the packing layout from it and
     # re-autotunes/re-jits against the new mesh
-    from repro.comm import plan as comm_plan_mod
-    train_step.comm_plan = comm_plan_mod.make(
-        comm_cfg, plan, resolved_bucket_mb=bucket_mb,
-        mesh_axes=axes, mesh_sizes=tuple(mesh.shape[a] for a in axes),
-        shard_axis=shard_axis,
-        n_shards=n_shards if shard_update else 1, strategy=comm,
-        overlap=overlap, shard_update=shard_update,
-        gather_ahead=gather_ahead)
+    from repro import comm as comm_pkg
+    train_step.comm_plan = comm_pkg.plan_for(
+        comm_cfg, (axes, tuple(mesh.shape[a] for a in axes)),
+        model.param_pd, resolved_bucket_mb=bucket_mb, strategy=comm,
+        overlap=overlap, sharding=sharding, gather=gather_mode,
+        n_shards=n_shards if shard_update else 1)
     return train_step
 
 

@@ -760,18 +760,27 @@ bf = make_batch_fn(cfg, InputShape("t", "train", 0, 8), mesh=mesh)
 def run(comm_cfg):
     step = make_train_step(model, lars.OptConfig(kind="lars"), sched,
                            mesh=mesh, comm=comm_cfg)
-    sharded = step.shard_update
+    sharded = step.sharding != "replicated"
     if sharded:
-        # the fully-overlapped wiring must be active: RS issued from
-        # inside the backward, AG issued at the start of the next forward
+        # the policy wiring must be active: RS issued from inside the
+        # backward, the param gather at the policy's issue point — and
+        # the deprecated boolean views must agree with the enum pair
+        assert step.sharding == comm_cfg.sharding
+        assert step.gather == comm_cfg.gather
         assert step.overlap == comm_cfg.overlap
-        assert step.gather_ahead == (comm_cfg.gather_ahead and sharded)
+        assert step.shard_update is True
+        assert step.gather_ahead == (step.gather == "ahead"
+                                     and step.sharding == "zero1")
     s = st.init_state(model, 0,
                       sharded_plan=step.bucket_plan if sharded else None,
-                      n_shards=step.n_shards if sharded else 1)
+                      n_shards=step.n_shards if sharded else 1,
+                      materialize_params=step.sharding != "zero3")
     f = jax.jit(step)
     for _ in range(2):
         s, m = f(s, bf(s.step))
+    if step.sharding == "zero3":
+        # ZeRO-3 contract: no persistent full replica, before or after
+        assert s.params is None, "zero3 state rematerialized params"
     if sharded:
         # authoritative masters live in the persistent shards
         full = st.full_params_from_shards(s.shards, step.bucket_plan,
@@ -822,6 +831,31 @@ if MESH == "flat":
                 sh_s.params, sh_p)))
             assert pd == 0.0, pd
         print(f"OK shard-step flat ring/{tag} maxdiff={md:.1e}")
+
+# ZeRO-3 cells — against the ring fp32 oracle kept from the loop's last
+# iteration. The jit-gather machinery is schedule-independent (the
+# per-group AG is prim.ring_all_gather regardless of the RS schedule, and
+# the RS side is exactly the per-schedule-verified ZeRO-1 path), so one
+# per-group cell per mesh covers it; flat adds the retained-gather and
+# non-overlapped variants
+z3_cells = [("per_group", CommConfig(strategy="ring", bucket_mb=1.0,
+                                     wire_dtype="f32", sharding="zero3"))]
+if MESH == "flat":
+    z3_cells += [
+        ("retain", CommConfig(strategy="ring", bucket_mb=1.0,
+                              wire_dtype="f32", sharding="zero3",
+                              gather="ahead")),
+        ("no-overlap", CommConfig(strategy="ring", bucket_mb=1.0,
+                                  wire_dtype="f32", sharding="zero3",
+                                  overlap=False)),
+    ]
+for tag, cc in z3_cells:
+    sh_s, sh_m, sh_p = run(cc)
+    md = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), base_p, sh_p)))
+    ml = abs(float(base_m["loss"]) - float(sh_m["loss"]))
+    assert md <= 1e-6 and ml <= 1e-6, (MESH, tag, md, ml)
+    print(f"OK shard-step {MESH} zero3/{tag} maxdiff={md:.1e}")
 print("STEP-MATRIX-OK")
 """
 
@@ -836,11 +870,16 @@ def test_sharded_step_matrix_8dev(mesh_tag):
     schedule + the bucketed alias, on the flat 8-device and the
     (pod, data) production-shaped mesh, plus (flat) ``bucket_mb='auto'``,
     the Pallas ``lars_update`` kernel path, and the end-of-step gather
-    issue point. Slow: every cell is a full ResNet compile on the
-    8-device CPU mesh (~70 s each; 13 cells flat, 10 pod) — hence the
-    wide timeout and the per-mesh parametrization."""
+    issue point. The ZeRO-3 cells (per_group on both meshes; retained
+    gather and non-overlapped on flat) hold the same <=1e-6 bar with NO
+    persistent param replica — ``state.params is None`` throughout, the
+    forward all-gathering each bucket group just-in-time and the
+    per_group backward re-gathering via rematerialization. Slow: every
+    cell is a full ResNet compile on the 8-device CPU mesh (~70 s each;
+    16 cells flat, 11 pod) — hence the wide timeout and the per-mesh
+    parametrization."""
     r = subprocess.run([sys.executable, "-c", SHARD_STEP_SCRIPT, mesh_tag],
-                       capture_output=True, text=True, timeout=1800,
+                       capture_output=True, text=True, timeout=2700,
                        env={**os.environ, "PYTHONPATH": "src"})
     assert "STEP-MATRIX-OK" in r.stdout, (r.stdout[-2000:],
                                           r.stderr[-3000:])
@@ -995,3 +1034,136 @@ def test_bucket_plan_groups_metadata():
         assert all(s.bucket == b for s in g)
         assert sum(s.padded for s in g) == plan.bucket_sizes[b]
     assert plan.bucket_bytes(2) == tuple(2 * s for s in plan.bucket_sizes)
+
+
+# ------------------------------------------------- sharding= policy API
+
+def test_resolve_policy_maps_booleans_and_defaults():
+    """The single resolution point for the enum pair: old booleans map to
+    their enum spellings; gather defaults per level."""
+    from repro.comm.autotune import resolve_policy
+    assert resolve_policy(None, None) == ("replicated", "ahead")
+    assert resolve_policy(None, None, shard_update=True) == \
+        ("zero1", "ahead")
+    assert resolve_policy(None, None, shard_update=True,
+                          gather_ahead=False) == ("zero1", "at_end")
+    assert resolve_policy("zero3", None) == ("zero3", "per_group")
+    assert resolve_policy("zero3", "ahead") == ("zero3", "ahead")
+    assert resolve_policy("zero1", None) == ("zero1", "ahead")
+
+
+def test_comm_config_boolean_shims_warn_and_resolve_identically():
+    """CommConfig(shard_update=True) must resolve — with a
+    DeprecationWarning — to exactly CommConfig(sharding='zero1'), and
+    gather_ahead=False to gather='at_end' (the acceptance bar: old
+    spellings stay bit-identical)."""
+    from repro.configs.base import CommConfig
+    with pytest.warns(DeprecationWarning):
+        old = CommConfig(strategy="ring", bucket_mb=1.0, shard_update=True)
+    new = CommConfig(strategy="ring", bucket_mb=1.0, sharding="zero1")
+    assert old == new
+    assert (old.sharding, old.gather) == ("zero1", "ahead")
+    assert old.shard_update is True and old.gather_ahead is True
+    with pytest.warns(DeprecationWarning):
+        old = CommConfig(strategy="ring", bucket_mb=1.0, shard_update=True,
+                         gather_ahead=False)
+    assert old == CommConfig(strategy="ring", bucket_mb=1.0,
+                             sharding="zero1", gather="at_end")
+    assert old.gather_ahead is False
+    # the default stays fully replicated, no warning
+    cc = CommConfig(strategy="ring", bucket_mb=1.0)
+    assert (cc.sharding, cc.gather) == ("replicated", "ahead")
+    assert cc.shard_update is False
+    # conflicts are errors, not silent precedence
+    with pytest.raises(ValueError):
+        CommConfig(sharding="replicated", shard_update=True)
+    with pytest.raises(ValueError):
+        CommConfig(sharding="zero1", gather="ahead", gather_ahead=False)
+    with pytest.raises(ValueError):
+        CommConfig(sharding="mirrored")
+    with pytest.raises(ValueError):
+        CommConfig(sharding="zero3", gather="at_end")   # no step-end form
+
+
+def test_zero3_simulate_modes_and_pricing():
+    """The cost model's ZeRO-3 timelines: mode names, the forward gather
+    pricing, and the per_group remat double-charge vs retain."""
+    from repro.comm.autotune import simulate
+    tree = {f"t{i}": jnp.zeros((160, 128)) for i in range(10)}
+    plan = bucketing.make_plan(tree, bucket_mb=0.1)
+    assert plan.n_buckets > 2
+    kw = dict(schedule="ring", axes=("data",), sizes=(16,),
+              t_backward_s=5e-3, t_forward_s=2.5e-3)
+    z1 = simulate(plan, sharding="zero1", **kw)
+    z3 = simulate(plan, sharding="zero3", gather="per_group", **kw)
+    z3r = simulate(plan, sharding="zero3", gather="ahead", **kw)
+    assert z1.mode == "shard_update+gather_ahead"
+    assert z3.mode == "zero3_jit_gather"
+    assert z3r.mode == "zero3_retain"
+    # same AG volume: retain gathers once, per_group re-gathers in the
+    # remat backward — exactly double
+    assert z3.t_gather_s == pytest.approx(2 * z3r.t_gather_s)
+    assert z3r.t_gather_s == pytest.approx(z1.t_gather_s)
+    # retain can only be <= per_group (no re-gather, unstretched backward)
+    assert z3r.t_step_s <= z3.t_step_s
+    # the RS side is the shared zero1 machinery: identical update time
+    assert z3.t_update_s == pytest.approx(z1.t_update_s)
+
+
+def test_param_memory_accounting_clears_the_floor():
+    """Peak-live-param-bytes accounting (``cost.param_memory``): zero1
+    keeps the 4N fp32 replica plus the full wire image (every bucket
+    buffer is live until the single tree-wide unpack in
+    ``ddp.all_gather_params``); zero3 keeps one group's wire bucket plus
+    its fp32 tensors. On ResNet-50 @ 1 MB buckets the reduction clears
+    the (n-1)/n floor at n=8 — the shard count the 8-device equivalence
+    matrix actually runs — and is n-independent."""
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("resnet50"))
+    plan = bucketing.make_plan(model.param_pd, bucket_mb=1.0)
+    rep = cost.param_memory(plan, 8, sharding="replicated")
+    z1 = cost.param_memory(plan, 8, sharding="zero1")
+    z3 = cost.param_memory(plan, 8, sharding="zero3")
+    assert rep.peak_bytes == 0           # baseline: the replica itself
+    n_padded = sum(plan.bucket_sizes)
+    n_unpadded = sum(plan.group_elems)
+    assert z1.persistent_bytes == 4 * n_unpadded
+    assert z1.transient_bytes == 2 * n_padded
+    assert z3.persistent_bytes == 0
+    assert z3.peak_bytes == max(
+        2 * b + 4 * g for b, g in zip(plan.bucket_sizes, plan.group_elems))
+    red = cost.param_memory_reduction(plan, 8)
+    assert red == pytest.approx(1 - z3.peak_bytes / z1.peak_bytes)
+    assert red >= 7 / 8, f"zero3 peak-param reduction {red:.4f} < 7/8"
+    # n-independence: the accounting is per-device bytes, not per-mesh
+    assert cost.param_memory_reduction(plan, 16) == pytest.approx(red)
+
+
+def test_plan_for_facade_assembles_commplan():
+    """``comm.plan_for(config, mesh, tree)`` — the one-call packaging of
+    autotune + bucketing + plan.make — carries the policy, resolves
+    'auto' buckets, and accepts both a Mesh and an (axes, sizes) pair."""
+    from repro.comm import plan_for
+    from repro.configs.base import CommConfig
+
+    tree = {f"t{i}": jnp.zeros((256, 64)) for i in range(6)}
+    cc = CommConfig(strategy="ring", bucket_mb=0.25, sharding="zero3")
+    p = plan_for(cc, (("data",), (8,)), tree)
+    assert (p.sharding, p.gather) == ("zero3", "per_group")
+    assert p.n_shards == 8 and p.schedule == "ring"
+    assert p.bucket_plan(tree).n_buckets == len(p.bucket_sizes)
+    # replicated plans don't shard
+    pr = plan_for(CommConfig(strategy="ring", bucket_mb=0.25),
+                  (("data",), (8,)), tree)
+    assert (pr.sharding, pr.n_shards) == ("replicated", 1)
+    # 'auto' resolves to a concrete bucket size
+    pa = plan_for(CommConfig(strategy="ring", bucket_mb="auto",
+                             sharding="zero1"), (("data",), (8,)), tree)
+    assert isinstance(pa.bucket_mb, float)
+    assert pa.requested_bucket_mb == "auto"
+    # a real Mesh works too
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pm = plan_for(cc, mesh, tree)
+    assert pm.mesh_axes == ("data", "model") and pm.n_shards == 1

@@ -1,0 +1,127 @@
+"""Fail CI on new in-repo uses of the deprecated sharding booleans.
+
+PR "ZeRO-3 + unified sharding policy" replaced ``CommConfig``'s
+``shard_update``/``gather_ahead`` booleans with the enum pair
+``sharding=`` / ``gather=`` (docs/comm.md §Migration). The booleans
+still *work* — ``configs/base.py`` maps them with a DeprecationWarning so
+user configs keep running — but in-repo code must use the new spelling.
+This linter is the ratchet:
+
+* AST pass: any ``CommConfig(...)`` call carrying a ``shard_update=`` or
+  ``gather_ahead=`` keyword in ``src/``, ``benchmarks/`` or ``tools/``
+  is an error. ``tests/`` is exempt (the shim tests exercise exactly
+  those spellings on purpose), as is ``configs/base.py`` (it defines the
+  shim).
+* Text pass: the retired CLI flags ``--shard-update`` /
+  ``--no-gather-ahead`` may appear only in ``launch/train.py`` (the
+  warn-and-map shims) and the docs' migration table.
+
+Run:  python tools/lint_deprecated.py   (exit 1 on any finding)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: directories the AST pass walks (tests/ deliberately absent)
+SCAN_DIRS = ("src", "benchmarks", "tools")
+
+DEPRECATED_KWARGS = ("shard_update", "gather_ahead")
+
+#: files allowed to spell the deprecated CommConfig keywords (the shim
+#: definition itself)
+KWARG_ALLOWLIST = {
+    os.path.join("src", "repro", "configs", "base.py"),
+}
+
+DEPRECATED_FLAGS = ("--shard-update", "--no-gather-ahead")
+
+#: files allowed to mention the retired CLI flags: the warn-and-map
+#: shims and the migration documentation
+FLAG_ALLOWLIST = {
+    os.path.join("src", "repro", "launch", "train.py"),
+    os.path.join("docs", "comm.md"),
+    os.path.join("tools", "lint_deprecated.py"),
+}
+
+
+def _py_files(rel_dirs):
+    for rel in rel_dirs:
+        base = os.path.join(ROOT, rel)
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in filenames:
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def _callee_name(func) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def lint_commconfig_kwargs(path: str) -> list:
+    """[(line, kwarg)] for CommConfig(...) calls using the old booleans."""
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:  # pragma: no cover - repo code must parse
+        return [(e.lineno or 0, f"unparseable: {e.msg}")]
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _callee_name(node.func) != "CommConfig":
+            continue
+        for kw in node.keywords:
+            if kw.arg in DEPRECATED_KWARGS:
+                out.append((node.lineno, kw.arg))
+    return out
+
+
+def lint_cli_flags(path: str) -> list:
+    """[(line, flag)] for retired CLI-flag literals."""
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for flag in DEPRECATED_FLAGS:
+                if flag in line:
+                    out.append((lineno, flag))
+    return out
+
+
+def main() -> int:
+    findings = []
+    for path in _py_files(SCAN_DIRS):
+        rel = os.path.relpath(path, ROOT)
+        if rel not in KWARG_ALLOWLIST:
+            for line, kwarg in lint_commconfig_kwargs(path):
+                findings.append(
+                    f"{rel}:{line}: CommConfig({kwarg}=...) is deprecated "
+                    f"— use sharding='replicated'|'zero1'|'zero3' / "
+                    f"gather='ahead'|'at_end'|'per_group' (docs/comm.md "
+                    f"§Migration)")
+        if rel not in FLAG_ALLOWLIST:
+            for line, flag in lint_cli_flags(path):
+                findings.append(
+                    f"{rel}:{line}: retired CLI flag {flag} — use "
+                    f"--sharding/--gather")
+    for f in findings:
+        print(f, file=sys.stderr)
+    if findings:
+        print(f"lint_deprecated: {len(findings)} finding(s)",
+              file=sys.stderr)
+        return 1
+    print("lint_deprecated: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
