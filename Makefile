@@ -30,6 +30,10 @@ ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 		'zero3 peak-param-memory smoke row missing from bench artifact'; \
 		assert any('ckpt.roundtrip' in r['name'] for r in rows), \
 		'ckpt-roundtrip smoke row missing from bench artifact'; \
+		assert any('guard.overhead' in r['name'] for r in rows), \
+		'guard sentinel-overhead smoke row missing from bench artifact'; \
+		assert any('guard.recovery' in r['name'] for r in rows), \
+		'guard recovery-ladder smoke row missing from bench artifact'; \
 		assert any('trace.drift' in r['name'] for r in rows), \
 		'trace-drift scoreboard row missing from bench artifact'"
 

@@ -796,6 +796,127 @@ def bench_ckpt_roundtrip(quick: bool):
          f"(+CommPlan, sha256 manifest)")
 
 
+def _guard_bench_setup():
+    """Shared construction for the guard benches (one guarded + one
+    unguarded reduced-ResNet ZeRO-1 step; the guarded compile is the
+    expensive part, so build once)."""
+    from repro.configs import get_config
+    from repro.configs.base import CommConfig
+    from repro.configs.shapes import InputShape
+    from repro.core import lars as lars_mod
+    from repro.core.schedule import ScheduleConfig, make_schedule
+    from repro.data.synthetic import make_batch_fn
+    from repro.models.registry import build_model
+    from repro.train import state as st_mod
+    from repro.train.step import make_train_step
+    if _GUARD_CACHE:
+        return _GUARD_CACHE["v"]
+    cfg = get_config("resnet50").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sched = make_schedule(ScheduleConfig(base_lr=0.1, warmup_steps=2,
+                                         total_steps=10))
+    cc = CommConfig(strategy="ring", bucket_mb=0.25, sharding="zero1")
+    mk = lambda g: make_train_step(model, lars_mod.OptConfig(kind="lars"),  # noqa: E731
+                                   sched, mesh=mesh, comm=cc, guard=g)
+    step_off, step_on = mk(False), mk(True)
+    bf = make_batch_fn(cfg, InputShape("t", "train", 0, 8), seed=0,
+                       mesh=mesh)
+    init = lambda: st_mod.init_state(  # noqa: E731
+        model, 0, mesh, sharded_plan=step_on.bucket_plan,
+        n_shards=step_on.n_shards)
+    _GUARD_CACHE["v"] = (step_off, step_on, bf, init)
+    return _GUARD_CACHE["v"]
+
+
+_GUARD_CACHE = {}
+
+
+def bench_guard_overhead(quick: bool):
+    """Numerical-guard happy-path cost (part of --smoke, asserted in CI —
+    docs/elastic.md §Numerical faults): the in-graph sentinel's nonfinite
+    counts + grad-norm ride out on the metrics dict with no extra host
+    sync, so a guarded step should cost within ~2% of the unguarded one.
+    Measured as deployed: ``loop.train`` jits the step with
+    ``donate_argnums=(0,)``, which lets XLA alias the cond-gated commit
+    into the donated state buffers instead of copying it — undonated the
+    same comparison reads ~14% because the commit becomes a full-state
+    memcpy. Batch 32 so compute (which scales with batch) dominates the
+    sentinel reductions (which don't — they run over the packed grads).
+    Guard-on and guard-off steps are interleaved per timing round and the
+    MIN per variant compared (min, not median: the sentinel is a fixed
+    additive cost, and min strips scheduler noise on a shared CI box)."""
+    from repro.configs import get_config
+    from repro.configs.shapes import InputShape
+    from repro.data.synthetic import make_batch_fn
+    from repro.train import guard as guard_mod
+    step_off, step_on, _, init = _guard_bench_setup()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    bf = make_batch_fn(get_config("resnet50").reduced(),
+                       InputShape("t", "train", 0, 32), seed=0, mesh=mesh)
+    rounds = 7 if quick else 15
+    f_off = jax.jit(step_off, donate_argnums=(0,))
+    f_on = jax.jit(step_on, donate_argnums=(0,))
+    s_off, s_on = init(), init()
+    b = bf(0)
+    neutral = guard_mod.neutral_inputs()
+    s_off, _ = f_off(s_off, b)                   # compile + warm
+    s_on, _ = f_on(s_on, b, neutral)
+    jax.block_until_ready((s_off, s_on))
+    t_off, t_on = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        s_off, _ = f_off(s_off, b)
+        jax.block_until_ready(s_off)
+        t_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        s_on, _ = f_on(s_on, b, neutral)
+        jax.block_until_ready(s_on)
+        t_on.append(time.perf_counter() - t0)
+    mn_off, mn_on = min(t_off), min(t_on)
+    pct = (mn_on - mn_off) / mn_off * 100.0
+    emit("guard.overhead", mn_on * 1e6,
+         f"unguarded {mn_off*1e6:.0f}us -> guarded {mn_on*1e6:.0f}us "
+         f"({pct:+.2f}%, claim <2%; donated jit as in loop.train, batch "
+         f"32, min of {rounds} interleaved rounds, hostCPU) — sentinel "
+         f"rides the metrics dict, cond commit aliases into the donated "
+         f"state")
+
+
+def bench_guard_recovery(quick: bool):
+    """Recovery-ladder wall cost (part of --smoke, asserted in CI): a
+    guarded run through ``nan@1,spike@3:50`` — one sentinel skip-and-replay
+    plus one detector trip with in-memory ring rollback (no checkpoint IO)
+    — must converge, and the row carries the whole-run wall time. The
+    skip/rollback counts are hard gates: the fault kinds must actually
+    drive their rungs."""
+    import tempfile
+
+    from repro.obs import metrics as obs_metrics
+    from repro.train import guard as guard_mod
+    from repro.train import loop as loop_mod
+    _, step_on, bf, init = _guard_bench_setup()
+    mem = obs_metrics.MemorySink()
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        with obs_metrics.default_registry().use_sink(mem):
+            fin, _ = loop_mod.train(
+                init(), step_on, bf, steps=6, log_every=0, ckpt_dir=d,
+                faults="nan@1,spike@3:50",
+                guard=guard_mod.GuardConfig(spike_factor=5.0))
+    wall = time.perf_counter() - t0
+    skips = len(mem.find("guard_skip"))
+    rollbacks = len(mem.find("guard_rollback"))
+    assert skips == 1 and rollbacks == 1, (
+        f"recovery ladder did not fire as injected: {skips} skips, "
+        f"{rollbacks} rollbacks (want 1 each)")
+    assert int(fin.step) == 6, int(fin.step)
+    emit("guard.recovery", wall * 1e6,
+         f"nan@1+spike@3:50 over 6 steps: {skips} sentinel skip, "
+         f"{rollbacks} ring rollback (no ckpt IO), run converged to step "
+         f"{int(fin.step)} — replayed, not dropped")
+
+
 def bench_trace_drift(quick: bool):
     """Predicted-vs-measured drift scoreboard rows (part of --smoke,
     asserted in CI — docs/observability.md §Drift rows): one 8-device
@@ -938,16 +1059,18 @@ ALL = [bench_table1, bench_fig2, bench_fig3, bench_fig4,
        bench_comm_schedules, bench_comm_overlap, bench_comm_shard_update,
        bench_autotune_plan, bench_shard_update_plan,
        bench_gather_ahead_plan, bench_zero3_plan, bench_ckpt_roundtrip,
-       bench_trace_drift]
+       bench_guard_overhead, bench_guard_recovery, bench_trace_drift]
 
 # --smoke: the CI micro-run — pure-math projection/accounting rows plus ONE
 # small 8-device subprocess (bench_trace_drift: traced collectives, no
-# model training), finishes in a few minutes and emits the JSON artifact
-# that tracks the bench trajectory per-PR (including the sharded-update,
-# gather-ahead, and predicted-vs-measured drift rows)
+# model training) and the in-process guard pair (one guarded reduced-ResNet
+# compile shared by both), finishes in a few minutes and emits the JSON
+# artifact that tracks the bench trajectory per-PR (including the
+# sharded-update, gather-ahead, drift, and guard rows)
 SMOKE = [bench_table1, bench_fig2, bench_autotune_plan,
          bench_shard_update_plan, bench_gather_ahead_plan,
-         bench_zero3_plan, bench_ckpt_roundtrip, bench_trace_drift]
+         bench_zero3_plan, bench_ckpt_roundtrip, bench_guard_overhead,
+         bench_guard_recovery, bench_trace_drift]
 
 
 def main() -> None:

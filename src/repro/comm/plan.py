@@ -292,5 +292,12 @@ def save(plan: CommPlan, path: str) -> str:
 def load(path: str) -> CommPlan:
     if not os.path.exists(path):
         raise CommPlanError(f"no CommPlan at {path!r}")
-    with open(path) as f:
-        return loads(f.read())
+    try:
+        with open(path) as f:
+            return loads(f.read())
+    except UnicodeDecodeError as e:
+        # bit-rot (the corrupt@s:plan fault's XOR flips) breaks UTF-8
+        # before it breaks JSON — same rejection either way
+        raise CommPlanError(
+            f"CommPlan {path!r} is not valid UTF-8 ({e}) — corrupt "
+            f"plan file") from e

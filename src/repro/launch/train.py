@@ -116,7 +116,24 @@ def main(argv=None):
     ap.add_argument("--inject-fault", default=None, metavar="SPEC",
                     help="fault-injection harness (train/faults.py): "
                          "comma-separated kind@step[:arg] — e.g. kill@7, "
-                         "sigterm@5, stall@3:2.5, corrupt@4")
+                         "sigterm@5, stall@3:2.5, corrupt@4:manifest, "
+                         "nan@3, spike@6:50")
+    ap.add_argument("--guard", action="store_true",
+                    help="numerical-integrity guard (train/guard.py, "
+                         "docs/elastic.md §Numerical faults): in-graph "
+                         "NaN sentinel with skip-update, divergence "
+                         "detector, in-memory rollback ring escalating to "
+                         "checkpoint restore")
+    ap.add_argument("--rollback-ring", type=int, default=2, metavar="N",
+                    help="guard rollback ring capacity: N in-memory "
+                         "device_get snapshots (0 = skip straight to "
+                         "checkpoint restore)")
+    ap.add_argument("--rollback-every", type=int, default=1, metavar="K",
+                    help="guard snapshot cadence in steps")
+    ap.add_argument("--rewarmup-steps", type=int, default=0, metavar="R",
+                    help="LR re-warmup window after a guard recovery, "
+                         "composed with the run schedule (0 = off, the "
+                         "trajectory-preserving setting)")
     ap.add_argument("--data", default="lcg", choices=["lcg", "uniform"])
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--trace", default=None, metavar="OUT.json",
@@ -223,13 +240,29 @@ def _run(args, *, reg: obs_metrics.Registry,
                 f"on mesh "
                 f"{dict(zip(saved_plan.mesh_axes, saved_plan.mesh_sizes))} "
                 f"with n_shards={saved_plan.n_shards}", where=WHERE)
+    from repro.train.faults import FaultInjector, parse_faults
+    fault_list = parse_faults(args.inject_fault)
+    if any(f.kind == "spike" for f in fault_list) and not args.guard:
+        raise SystemExit(
+            "spike@s:mag rides in through the guarded step's loss_scale "
+            "input — add --guard")
+    guard_cfg = None
+    if args.guard:
+        from repro.train.guard import GuardConfig
+        guard_cfg = GuardConfig(ring_capacity=args.rollback_ring,
+                                snapshot_every=max(args.rollback_every, 1),
+                                rewarmup_steps=args.rewarmup_steps)
+        reg.event("guard_armed",
+                  f"numerical guard on: ring={args.rollback_ring} "
+                  f"snapshots every {max(args.rollback_every, 1)} step(s), "
+                  f"rewarmup={args.rewarmup_steps}", where=WHERE)
     train_step = make_train_step(model, opt, sched, smoothing=args.smoothing,
                                  mesh=mesh, comm=comm_cfg,
                                  grad_accum=args.grad_accum,
                                  profile_batch=(batch_fn(0) if
                                                 args.backward_profile ==
                                                 "measured" else None),
-                                 tracer=tracer)
+                                 tracer=tracer, guard=args.guard)
     if getattr(train_step, "tuned", None) is not None:
         t = train_step.tuned
         reg.event("autotune_plan",
@@ -268,7 +301,6 @@ def _run(args, *, reg: obs_metrics.Registry,
         reg.event("elastic_resume",
                   f"elastic resume: restored step {int(state.step)}, "
                   f"resharded {old_n} -> {new_n} shards", where=WHERE)
-    from repro.train.faults import FaultInjector, parse_faults
     state, history = loop.train(
         state, train_step, batch_fn, steps=args.steps, eval_step=eval_step,
         eval_batch_fn=batch_fn, eval_every=args.eval_every,
@@ -276,8 +308,8 @@ def _run(args, *, reg: obs_metrics.Registry,
         keep_last_k=args.keep_last_k, step_timeout_s=args.step_timeout_s,
         max_step_retries=args.max_step_retries,
         comm_plan=getattr(train_step, "comm_plan", None),
-        faults=FaultInjector(parse_faults(args.inject_fault)),
-        tracer=tracer)
+        faults=FaultInjector(fault_list),
+        tracer=tracer, guard=guard_cfg)
     if tracer is not None:
         path = obs_trace.export_chrome(tracer, args.trace)
         reg.event("trace_written",

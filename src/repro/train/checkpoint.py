@@ -97,7 +97,9 @@ def read_manifest(ckpt_dir: str) -> Optional[dict]:
     try:
         with open(path) as f:
             m = json.load(f)
-    except json.JSONDecodeError as e:
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        # UnicodeDecodeError: bit-rot (e.g. the corrupt@s:manifest fault's
+        # XOR flips) usually breaks UTF-8 before it breaks JSON
         raise CheckpointCorruptError(
             f"manifest {path!r} does not parse ({e}) — the directory needs "
             f"manual repair; individual ckpt_<tag>.npz files may still load "
@@ -278,7 +280,16 @@ def load_arrays(ckpt_dir: str, *, tag: Optional[str] = None
     plan_path = os.path.join(ckpt_dir, f"commplan_{tag}.json")
     if os.path.exists(plan_path):
         from repro.comm import plan as comm_plan_mod
-        plan = comm_plan_mod.load(plan_path)
+        try:
+            plan = comm_plan_mod.load(plan_path)
+        except comm_plan_mod.CommPlanError as e:
+            # the plan is not covered by the payload checksum; a corrupt
+            # one must surface as a checkpoint rejection, not a crash in
+            # the JSON parser (corrupt@s:plan fault)
+            raise CheckpointCorruptError(
+                f"CommPlan {plan_path!r} committed with tag {tag!r} does "
+                f"not parse ({e}) — the checkpoint is corrupt; load an "
+                f"older tag explicitly") from e
     return meta, data, plan
 
 

@@ -19,15 +19,36 @@ stall      ``stall@s:secs``         Sleep ``secs`` inside step s's watchdog
                                     device. Trips the step watchdog, which
                                     restores the last good checkpoint and
                                     retries with backoff.
-corrupt    ``corrupt@s``            After the first checkpoint committed at
-                                    step >= s, flip bytes in its payload —
-                                    bit-rot / torn write. The manifest
-                                    checksum must reject it at load time.
+corrupt    ``corrupt@s[:target]``   After the first checkpoint committed at
+                                    step >= s, flip bytes in one of its
+                                    files — bit-rot / torn write. ``target``
+                                    is ``payload`` (default: the ``.npz``;
+                                    the manifest checksum rejects it and the
+                                    load falls back), ``manifest``
+                                    (``MANIFEST.json`` itself — loads refuse
+                                    with ``CheckpointCorruptError``), or
+                                    ``plan`` (the ``commplan_<tag>.json`` —
+                                    rejected as corrupt at load).
+nan        ``nan@s``                Poison step s's batch with NaNs (first
+                                    element of every float leaf) — a bad
+                                    input record / flaky DMA. The guarded
+                                    step's sentinel must skip the update
+                                    (docs/elastic.md §Numerical faults);
+                                    unguarded, the NaN propagates into the
+                                    weights forever.
+spike      ``spike@s:mag``          Scale step s's differentiated loss by
+                                    ``mag`` — a loss spike whose *finite*
+                                    but huge gradients commit a bad update.
+                                    The divergence detector must catch it
+                                    and roll back. Needs a guarded step
+                                    (``--guard``): the scale rides in
+                                    through the ``guard_in`` input.
 =========  =======================  =========================================
 
 Specs compose comma-separated: ``"stall@3:2.5,kill@7"``. Each fault fires
 at most once per process (the retry after a stall must not re-stall, or the
-watchdog's bounded-retry loop could never converge).
+watchdog's bounded-retry loop could never converge — and a replayed
+nan/spike step must come back clean so the recovery ladder converges too).
 """
 from __future__ import annotations
 
@@ -39,7 +60,10 @@ from typing import Optional, Tuple
 
 from repro.obs import metrics as obs_metrics
 
-KINDS = ("kill", "sigterm", "stall", "corrupt")
+KINDS = ("kill", "sigterm", "stall", "corrupt", "nan", "spike")
+
+#: corrupt-fault targets (``corrupt@s:target``)
+CORRUPT_TARGETS = ("payload", "manifest", "plan")
 
 _WHERE = "repro/train/faults.py"
 
@@ -61,7 +85,8 @@ class FaultSpecError(ValueError):
 class Fault:
     kind: str          # one of KINDS
     step: int          # global step the fault is armed for
-    arg: float = 0.0   # stall seconds (stall only)
+    arg: float = 0.0   # stall seconds / spike magnitude
+    target: str = ""   # corrupt target: '' (payload) | 'manifest' | 'plan'
 
 
 def parse_faults(spec: Optional[str]) -> Tuple[Fault, ...]:
@@ -81,14 +106,25 @@ def parse_faults(spec: Optional[str]) -> Tuple[Fault, ...]:
                                  f"(known: {', '.join(KINDS)})")
             step_s, _, arg_s = rest.partition(":")
             step = int(step_s)
-            arg = float(arg_s) if arg_s else 0.0
+            arg, target = 0.0, ""
+            if kind == "corrupt":
+                if arg_s and arg_s not in CORRUPT_TARGETS:
+                    raise ValueError(
+                        f"corrupt target {arg_s!r} (known: "
+                        f"{', '.join(CORRUPT_TARGETS)})")
+                target = arg_s if arg_s != "payload" else ""
+            elif arg_s:
+                arg = float(arg_s)
             if kind == "stall" and arg <= 0:
                 raise ValueError("stall needs a duration: stall@STEP:SECS")
+            if kind == "spike" and arg <= 0:
+                raise ValueError("spike needs a magnitude: spike@STEP:MAG")
         except ValueError as e:
             raise FaultSpecError(
                 f"bad fault spec {part!r} ({e}); expected "
-                f"kind@step[:arg], e.g. kill@7, stall@3:2.5") from e
-        out.append(Fault(kind, step, arg))
+                f"kind@step[:arg], e.g. kill@7, stall@3:2.5, nan@3, "
+                f"spike@6:50, corrupt@4:manifest") from e
+        out.append(Fault(kind, step, arg, target))
     return tuple(out)
 
 
@@ -122,16 +158,83 @@ class FaultInjector:
             _log_fault("kill", step, "SIGKILL (unannounced preemption)")
             os.kill(os.getpid(), signal.SIGKILL)
 
+    def poison_batch(self, batch, step: int):
+        """Called with each step's batch before dispatch: a due ``nan``
+        fault NaN-poisons the first element of every float leaf. The fault
+        fires once, so a guard-skipped step replays with the clean batch."""
+        for f in self._due("nan", step):
+            batch = poison_nan(batch)
+            _log_fault("nan", step,
+                       "poisoned batch float leaves with NaN")
+        return batch
+
+    def loss_scale(self, step: int) -> float:
+        """The guarded step's ``loss_scale`` input for this step: the
+        product of due ``spike`` magnitudes (1.0 when none are due). The
+        fault fires once, so the post-rollback replay runs unscaled."""
+        scale = 1.0
+        for f in self._due("spike", step):
+            scale *= f.arg
+            _log_fault("spike", step,
+                       f"scaling the differentiated loss x{f.arg:g}")
+        return scale
+
     def on_saved(self, ckpt_path: str, step: int) -> None:
         """Called after each checkpoint commit with the payload path."""
         for f in self._due("corrupt", step):
-            corrupt_file(ckpt_path)
+            path = _corrupt_target_path(ckpt_path, f.target)
+            corrupt_file(path)
             _log_fault("corrupt", step,
-                       f"flipped bytes in {ckpt_path} (injected bit-rot)")
+                       f"flipped bytes in {path} (injected bit-rot, "
+                       f"target={f.target or 'payload'})")
 
     @property
     def any_pending(self) -> bool:
         return any(f not in self._fired for f in self.faults)
+
+
+def _corrupt_target_path(ckpt_path: str, target: str) -> str:
+    """Resolve a corrupt fault's victim file from the committed payload
+    path (``.../ckpt_<tag>.npz``)."""
+    if not target:
+        return ckpt_path
+    d = os.path.dirname(ckpt_path)
+    if target == "manifest":
+        return os.path.join(d, "MANIFEST.json")
+    base = os.path.basename(ckpt_path)            # ckpt_<tag>.npz
+    tag = base[len("ckpt_"):-len(".npz")]
+    path = os.path.join(d, f"commplan_{tag}.json")
+    if not os.path.exists(path):
+        raise FaultSpecError(
+            f"corrupt@..:plan armed but checkpoint {tag!r} committed no "
+            f"CommPlan ({path!r} missing) — only sharded explicit-DP runs "
+            f"save one")
+    return path
+
+
+def poison_nan(batch):
+    """NaN the first element of every float leaf of ``batch`` (host-side
+    copy; int leaves pass through). Raises if the batch has no float leaf
+    to poison — an LM token batch cannot carry a NaN."""
+    import jax
+    import numpy as np
+    hit = []
+
+    def p(x):
+        a = np.asarray(jax.device_get(x))
+        if not np.issubdtype(a.dtype, np.floating):
+            return x
+        a = a.copy()
+        a.reshape(-1)[0] = np.nan
+        hit.append(True)
+        return a
+
+    out = jax.tree.map(p, batch)
+    if not hit:
+        raise FaultSpecError(
+            "nan fault found no float leaf in the batch to poison (integer "
+            "token batches cannot go NaN — inject spike@s:mag instead)")
+    return out
 
 
 def corrupt_file(path: str, *, offset: Optional[int] = None,

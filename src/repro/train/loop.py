@@ -16,7 +16,15 @@ elastic/fault-tolerance machinery (docs/elastic.md):
   checkpoint is always committed at run_stop when ``ckpt_dir`` is set —
   a run whose ``steps`` is not a multiple of ``ckpt_every`` keeps its tail.
 * **fault hooks** (``faults``): a ``train.faults.FaultInjector`` (or its
-  spec string) fires kill/sigterm/stall/corrupt at the loop's hook points.
+  spec string) fires kill/sigterm/stall/corrupt/nan/spike at the loop's
+  hook points.
+* **numerical-integrity guard** (``guard``, docs/elastic.md §Numerical
+  faults): with a guarded step (``make_train_step(..., guard=True)``) the
+  loop drives the recovery ladder — an in-graph sentinel skips nonfinite
+  steps (replayed in place), a host-side EMA divergence detector trips an
+  in-memory rollback ring (``device_get`` snapshots, no checkpoint IO)
+  followed by an optional LR re-warmup window, escalating to checkpoint
+  restore and then bounded-retry exhaustion exactly like the watchdog.
 
 The jitted eval step and the authoritative-params gather are built once
 per ``train()`` call (not re-jitted per eval), which also keeps eval
@@ -35,7 +43,11 @@ import jax
 from repro.obs import metrics as obs_metrics
 from repro.train import checkpoint as ckpt
 from repro.train.faults import FaultInjector, parse_faults
+from repro.train.guard import (DivergenceDetector, GuardConfig,
+                               RollbackRing, rewarmup_scale_fn)
 from repro.train.state import TrainState
+
+_WHERE = "repro/train/loop.py"
 
 
 class StepTimeoutError(RuntimeError):
@@ -119,9 +131,14 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
           ckpt_every: int = 0, seed: int = 0, keep_last_k: int = 0,
           step_timeout_s: float = 0.0, max_step_retries: int = 3,
           retry_backoff_s: float = 0.5, comm_plan=None, faults=None,
-          tracer=None):
+          tracer=None, guard: Optional[GuardConfig] = None):
     """Runs optimizer steps up to global step ``steps`` (a resumed state
     continues from ``state.step``). Returns (state, history).
+
+    ``guard`` (a ``train.guard.GuardConfig``) configures the numerical-
+    integrity recovery ladder; it requires a guarded step
+    (``make_train_step(..., guard=True)``). A guarded step with
+    ``guard=None`` runs under the default ``GuardConfig()``.
 
     ``tracer`` (an ``obs.trace.Tracer``, also threaded into the step via
     ``make_train_step(..., tracer=...)``) makes the loop own the step
@@ -137,12 +154,30 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
     t0 = time.time()
     watchdog = bool(step_timeout_s and step_timeout_s > 0)
     # donation frees the old state's buffers mid-step — incompatible with
-    # keeping it as the watchdog's in-memory fallback restore point
+    # keeping it as the watchdog's in-memory fallback restore point. The
+    # guard is donation-safe on its own: the skip path's lax.cond returns
+    # the old values as step OUTPUTS, and the rollback ring holds host
+    # copies taken before dispatch.
     step_fn = (jax.jit(train_step) if watchdog
                else jax.jit(train_step, donate_argnums=(0,)))
     eval_fn = jax.jit(eval_step) if eval_step is not None else None
     params_reader = make_params_reader(train_step)
     last_saved_step = None
+
+    guarded = bool(getattr(train_step, "guarded", False))
+    if guard is not None and not guarded:
+        raise ValueError(
+            "loop.train(guard=...) needs a guarded step — build it with "
+            "make_train_step(..., guard=True)")
+    gcfg = guard if guard is not None else (GuardConfig() if guarded
+                                            else None)
+    detector = DivergenceDetector(gcfg) if guarded else None
+    ring = RollbackRing(gcfg.ring_capacity) if guarded else None
+    rewarm = rewarmup_scale_fn(gcfg.rewarmup_steps) if guarded else None
+    rewarm_start = None       # step a recovery re-warmup window opened at
+    skips = 0                 # consecutive sentinel skips
+    rollbacks = 0             # ring rollbacks used
+    restores = 0              # guard checkpoint restores used
 
     def save_ckpt(s: TrainState) -> None:
         nonlocal last_saved_step
@@ -176,15 +211,27 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
         save_ckpt(state)
     i = start
     retries = 0
+    if guarded and ring is not None:
+        # baseline snapshot: rung 2 must have a rollback target even if
+        # the very first steps diverge
+        ring.snapshot(state)
     try:
         while i < steps:
-            batch = batch_fn(state.step)
+            batch = injector.poison_batch(batch_fn(state.step), i)
+            guard_in = None
+            if guarded:
+                import numpy as np
+                scale = (1.0 if rewarm_start is None
+                         else rewarm(i - rewarm_start))
+                guard_in = {"lr_scale": np.float32(scale),
+                            "loss_scale": np.float32(injector.loss_scale(i))}
 
-            def run_step(state=state, batch=batch, i=i):
+            def run_step(state=state, batch=batch, i=i, guard_in=guard_in):
                 injector.on_step(i)
                 if tracer is not None:
                     tracer.begin_step()
-                s2, m = step_fn(state, batch)
+                s2, m = (step_fn(state, batch, guard_in) if guarded
+                         else step_fn(state, batch))
                 out = jax.block_until_ready((s2, m))
                 if tracer is not None:
                     tracer.end_step(i)
@@ -229,12 +276,111 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
                                               "in-memory state"})
                 time.sleep(min(retry_backoff_s * 2 ** (retries - 1), 30.0))
                 continue
+            if guarded:
+                # ---- recovery ladder (docs/elastic.md §Numerical faults)
+                g_loss = float(metrics["loss"])
+                g_gnorm = float(metrics["gnorm"])
+                reason = None
+                if float(metrics["skipped"]) > 0:
+                    # rung 1: the in-graph sentinel refused the update —
+                    # state (and state.step) are unchanged, replay step i
+                    skips += 1
+                    obs_metrics.counter("obs.guard.skip_total",
+                                        where=_WHERE, step=i)
+                    if tracer is not None:
+                        tracer.instant("guard_skip", step=i, attempt=skips)
+                    mlperf_log("guard_skip",
+                               {"step": i, "attempt": skips,
+                                "nonfinite": int(float(metrics["nonfinite"]))})
+                    history.append({"step": i, "guard_skip": skips})
+                    if skips <= gcfg.max_skips:
+                        if not preempted.is_set():
+                            continue
+                        reason = "preempted mid-skip"
+                    else:
+                        reason = (f"{skips} consecutive nonfinite steps "
+                                  f"at step {i}")
+                else:
+                    skips = 0
+                    if detector.observe(g_loss, g_gnorm) != "ok":
+                        reason = (f"divergence at step {i}: loss "
+                                  f"{g_loss:.4g}, grad-norm {g_gnorm:.4g} "
+                                  f"vs EMA {detector.ema_gnorm or 0.0:.4g}")
+                if reason == "preempted mid-skip":
+                    # a skipped step committed nothing; drain like the
+                    # normal preemption path below
+                    mlperf_log("preempt_drain", {"step": i})
+                    if ckpt_dir and last_saved_step != int(state.step):
+                        save_ckpt(state)
+                    break
+                if reason is not None:
+                    recovered = False
+                    snap = ring.newest()
+                    if snap is not None and rollbacks < gcfg.max_rollbacks:
+                        # rung 2: in-memory rollback, no checkpoint IO
+                        rollbacks += 1
+                        rstep, hstate = snap
+                        state = RollbackRing.restore(hstate)
+                        i = int(state.step)
+                        if gcfg.rewarmup_steps:
+                            rewarm_start = i
+                        obs_metrics.counter("obs.guard.rollback_total",
+                                            where=_WHERE, step=i)
+                        if tracer is not None:
+                            tracer.instant("guard_rollback", step=i,
+                                           used=rollbacks)
+                        mlperf_log("guard_rollback",
+                                   {"resume_step": i, "used": rollbacks,
+                                    "reason": reason})
+                        history.append({"step": i,
+                                        "guard_rollback": rollbacks})
+                        if ckpt_dir:
+                            # guard-escalation save: step-tagged, so
+                            # keep_last_k retention can prune a spiky
+                            # run's trail (hand-named tags stay spared)
+                            save_ckpt(state)
+                        recovered = True
+                    elif ckpt_dir and restores < gcfg.max_restores:
+                        # rung 3: checkpoint restore
+                        try:
+                            state = ckpt.load(state, ckpt_dir, tag=None)
+                            restores += 1
+                            i = int(state.step)
+                            if gcfg.rewarmup_steps:
+                                rewarm_start = i
+                            obs_metrics.counter("obs.guard.restore_total",
+                                                where=_WHERE, step=i)
+                            if tracer is not None:
+                                tracer.instant("guard_ckpt_restore", step=i)
+                            mlperf_log("guard_ckpt_restore",
+                                       {"resume_step": i, "reason": reason})
+                            history.append({"step": i, "guard_restore": 1})
+                            recovered = True
+                        except ckpt.CheckpointError as err:
+                            mlperf_log("guard_no_checkpoint",
+                                       {"step": i, "error": str(err)})
+                    if not recovered:
+                        # rung 4: bounded-retry exhaustion
+                        raise RuntimeError(
+                            f"numerical guard exhausted its recovery "
+                            f"ladder ({rollbacks} rollbacks, {restores} "
+                            f"checkpoint restores) — {reason}")
+                    skips = 0
+                    continue
+                if ring is not None and \
+                        int(state.step) % max(gcfg.snapshot_every, 1) == 0:
+                    # snapshot only a state that passed sentinel AND
+                    # detector: a spiked state is never a restore target
+                    ring.snapshot(state)
             if log_every and (i % log_every == 0 or i == steps - 1):
                 m = {k: float(v) for k, v in metrics.items()}
                 history.append({"step": i, **m})
                 mlperf_log("train_step",
                            {"step": i, "loss": round(m["loss"], 4),
                             "lr": round(m.get("lr", 0.0), 6)})
+                if guarded:
+                    obs_metrics.gauge("obs.guard.gnorm", m["gnorm"],
+                                      where=_WHERE, step=i)
             if eval_every and eval_fn is not None \
                     and (i + 1) % eval_every == 0:
                 mlperf_log("eval_start")
@@ -253,11 +399,14 @@ def train(state: TrainState, train_step: Callable, batch_fn: Callable, *,
                 save_ckpt(state)
             if preempted.is_set():
                 # announced preemption: the in-flight step has drained —
-                # commit the tail and hand back a resumable state
+                # commit the tail and hand back a resumable state. Guarded
+                # by last_saved_step like the run-stop tail: a drained step
+                # that also landed on the ckpt_every cadence was saved two
+                # lines up and must not commit the same step twice.
                 if tracer is not None:
                     tracer.instant("preempt_drain", step=i)
                 mlperf_log("preempt_drain", {"step": i})
-                if ckpt_dir:
+                if ckpt_dir and last_saved_step != int(state.step):
                     save_ckpt(state)
                 break
         if ckpt_dir and last_saved_step != int(state.step):

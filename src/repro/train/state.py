@@ -68,6 +68,23 @@ def full_params_from_shards(shards, plan, n_shards: int = 1):
     return bucketing.unpack(bufs, plan, dtype=jnp.float32)
 
 
+def host_snapshot(state: TrainState) -> TrainState:
+    """Full host-side copy of the state (numpy leaves) — what the guard's
+    in-memory rollback ring stores (train/guard.py): cheap relative to a
+    checkpoint commit (no serialization, no fsync) and layout-agnostic
+    (shards/momentum/bn ride along as-is, ZeRO-3's ``params=None``
+    included)."""
+    return jax.device_get(state)
+
+
+def restore_snapshot(host_state: TrainState) -> TrainState:
+    """Inverse of :func:`host_snapshot`: the numpy leaves back onto
+    devices. Placement is uncommitted — the jitted step's in_specs (or
+    GSPMD) re-place them on the next dispatch, so a rollback never needs
+    to know the mesh."""
+    return jax.device_put(host_state)
+
+
 def init_state(model, seed: int = 0, mesh=None, opt_kind: str = "lars",
                sharded_plan=None, n_shards: int = 1,
                materialize_params: bool = True) -> TrainState:

@@ -39,6 +39,7 @@ from repro.core.label_smoothing import IGNORE, smoothed_xent, top1_accuracy
 from repro.core.precision import cast_to_compute
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.train import guard as guard_lib
 from repro.train.state import TrainState
 
 
@@ -74,7 +75,8 @@ def make_loss_fn(model, *, smoothing: float = 0.1, aux_coef: float = 0.01,
 def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                     smoothing: float = 0.1, mesh=None, comm: str = "xla",
                     bucket_mb: float = 4.0, comm_dtype: str = "bf16",
-                    grad_accum: int = 1, profile_batch=None, tracer=None):
+                    grad_accum: int = 1, profile_batch=None, tracer=None,
+                    guard: bool = False):
     """Returns train_step(state, batch) -> (state, metrics). Not jitted —
     the caller owns jit/shardings (launcher, dryrun, tests).
 
@@ -106,19 +108,37 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     the explicit-DDP paths: forward/backward/update compute spans here,
     per-bucket ``rs``/``ar``/``ag`` comm spans inside the ddp hooks. None
     (the default) leaves the traced graph byte-identical to the
-    uninstrumented one — tracing is opt-in per run, not per step."""
+    uninstrumented one — tracing is opt-in per run, not per step.
+
+    ``guard=True`` arms the numerical-integrity sentinel (train/guard.py,
+    docs/elastic.md §Numerical faults) on every path (xla, replicated,
+    zero1, zero3): the step signature becomes
+    ``train_step(state, batch, guard_in)`` with
+    ``guard_in = {'lr_scale', 'loss_scale'}`` f32 scalars (the loop's LR
+    re-warmup and the ``spike@s:mag`` fault hook; 1.0 on the happy path),
+    the metrics dict gains ``gnorm``/``nonfinite``/``skipped`` scalar rows,
+    and a ``lax.cond`` commits the previous state unchanged whenever the
+    loss or any gradient goes nonfinite. ``guard=False`` (default) leaves
+    the step byte-identical to the unguarded graph — the same opt-in
+    contract as ``tracer``. The returned step carries ``.guarded``."""
     comm_cfg = comm if isinstance(comm, CommConfig) else CommConfig(
         strategy=comm, bucket_mb=bucket_mb, wire_dtype=comm_dtype)
     comm, bucket_mb, comm_dtype = (comm_cfg.strategy, comm_cfg.bucket_mb,
                                    comm_cfg.wire_dtype)
     loss_fn = make_loss_fn(model, smoothing=smoothing, mesh=mesh)
 
-    def sgd_update(state: TrainState, grads, metrics, new_bn):
+    def sgd_update(state: TrainState, grads, metrics, new_bn,
+                   guard_in=None):
         lr = schedule(state.step)
+        if guard_in is not None:
+            lr = lr * guard_in["lr_scale"]
         params, mom = lars.update(state.params, grads, state.mom, lr,
                                   opt_cfg)
         metrics = dict(metrics, lr=lr)
-        return TrainState(state.step + 1, params, mom, new_bn), metrics
+        new_state = TrainState(state.step + 1, params, mom, new_bn)
+        if guard_in is None:
+            return new_state, metrics
+        return guard_lib.apply_guard(state, new_state, metrics, grads)
 
     if comm == "xla":
         assert comm_cfg.sharding != "zero3", (
@@ -126,13 +146,15 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             "repro.comm.registry), not comm='xla' — GSPMD owns the param "
             "layout there (use FSDP PartitionSpecs instead)")
 
-        def train_step(state: TrainState, batch):
+        def xla_step(state: TrainState, batch, guard_in=None):
+            lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
+                   if guard_in is not None else loss_fn)
             p_in = (cast_to_compute(state.params) if comm_dtype == "bf16"
                     else state.params)
             if grad_accum == 1:
                 (_, (metrics, new_bn)), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(p_in, batch, state.bn_state)
-                return sgd_update(state, grads, metrics, new_bn)
+                    lfn, has_aux=True)(p_in, batch, state.bn_state)
+                return sgd_update(state, grads, metrics, new_bn, guard_in)
 
             # gradient accumulation: the paper's 81,920 global batch on a
             # smaller chip count = scan over microbatches, mean the grads
@@ -143,7 +165,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             def acc_fn(carry, mb):
                 g_acc, bn = carry
                 (_, (metrics, new_bn)), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(p_in, mb, bn)
+                    lfn, has_aux=True)(p_in, mb, bn)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g)
                 return (g_acc, new_bn), metrics
@@ -154,7 +176,15 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                 acc_fn, (g0, state.bn_state), micro)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             metrics = jax.tree.map(lambda m: m.mean(), ms)
-            return sgd_update(state, grads, metrics, new_bn)
+            return sgd_update(state, grads, metrics, new_bn, guard_in)
+
+        if guard:
+            def train_step(state: TrainState, batch, guard_in):
+                return xla_step(state, batch, guard_in)
+        else:
+            def train_step(state: TrainState, batch):
+                return xla_step(state, batch)
+        train_step.guarded = guard
         return train_step
 
     # ------ explicit-DDP path (paper §III-C), pure data parallelism ------
@@ -217,7 +247,9 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     # zero3's 'ahead' means retain-through-backward inside the step
     gather_ahead = gather_mode == "ahead" and sharding == "zero1"
 
-    def sharded_step(state: TrainState, batch):
+    def sharded_step(state: TrainState, batch, guard_in=None):
+        lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
+               if guard_in is not None else loss_fn)
         # gather-ahead (the default): rebuild this step's forward params
         # from the persistent master shards updated by the PREVIOUS step —
         # each bucket's all-gather is consumed only by its own layer group,
@@ -242,7 +274,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                     p, plan, strategy=comm, axes=axes, comm_dtype=wire,
                     use_kernel=comm_cfg.use_kernel, shard_sinks=sks,
                     tracer=tracer)
-                return loss_fn(p, b, bn)
+                return lfn(p, b, bn)
 
             (loss_val, (metrics, new_bn)), g_shards = jax.value_and_grad(
                 sink_loss, has_aux=True)(sinks, params, batch,
@@ -253,7 +285,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             obs_trace.mark(tracer, "backward", "E", g_shards, cat="compute")
         else:
             (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch, state.bn_state)
+                lfn, has_aux=True)(params, batch, state.bn_state)
             # E on the raw (pre-reduce-scatter) grads: the RS below starts
             # only after the whole backward ends — the testable invariant
             obs_trace.mark(tracer, "backward", "E",
@@ -267,6 +299,8 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
         lr = schedule(state.step)
+        if guard_in is not None:
+            lr = lr * guard_in["lr_scale"]
         obs_trace.mark(tracer, "update", "B", g_shards, cat="compute")
         p_shards, m_shards = lars.sharded_update_from_shards(
             list(state.shards), g_shards, list(state.mom), lr, opt_cfg,
@@ -279,10 +313,19 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                                             wire_dtype=wire,
                                             tracer=tracer))
         metrics = dict(metrics, lr=lr)
-        return TrainState(state.step + 1, new_params, m_shards, new_bn,
-                          p_shards), metrics
+        new_state = TrainState(state.step + 1, new_params, m_shards,
+                               new_bn, p_shards)
+        if guard_in is None:
+            return new_state, metrics
+        # the sentinel reduces over the device-local shard chunks: psum
+        # over the shard axis reassembles the global count/norm (the
+        # chunks are replicated over the other mesh axes)
+        return guard_lib.apply_guard(state, new_state, metrics, g_shards,
+                                     psum_axis=shard_axis)
 
-    def zero3_step(state: TrainState, batch):
+    def zero3_step(state: TrainState, batch, guard_in=None):
+        lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
+               if guard_in is not None else loss_fn)
         # ZeRO-3: no persistent params anywhere — the forward re-creates
         # each bucket group's fp32 leaves from the master shards just in
         # time (ddp.jit_gather_params) and XLA's liveness frees them after
@@ -306,7 +349,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                     params, plan, strategy=comm, axes=axes, comm_dtype=wire,
                     use_kernel=comm_cfg.use_kernel, shard_sinks=sks,
                     tracer=tracer)
-                return loss_fn(p, b, bn)
+                return lfn(p, b, bn)
 
             inner = (jax.checkpoint(sink_loss3)
                      if gather_mode == "per_group" else sink_loss3)
@@ -324,7 +367,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                 state.shards, plan, shard_axis=shard_axis, wire_dtype=wire,
                 tracer=tracer)
             (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch, state.bn_state)
+                lfn, has_aux=True)(params, batch, state.bn_state)
             obs_trace.mark(tracer, "backward", "E",
                            jax.tree.leaves(grads), cat="compute")
             g_shards = ddp.reduce_scatter_grads(
@@ -336,6 +379,8 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
         lr = schedule(state.step)
+        if guard_in is not None:
+            lr = lr * guard_in["lr_scale"]
         obs_trace.mark(tracer, "update", "B", g_shards, cat="compute")
         p_shards, m_shards = lars.sharded_update_from_shards(
             list(state.shards), g_shards, list(state.mom), lr, opt_cfg,
@@ -343,14 +388,20 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             update_kernel=comm_cfg.update_kernel)
         obs_trace.mark(tracer, "update", "E", p_shards, cat="compute")
         metrics = dict(metrics, lr=lr)
-        return TrainState(state.step + 1, None, m_shards, new_bn,
-                          p_shards), metrics
+        new_state = TrainState(state.step + 1, None, m_shards, new_bn,
+                               p_shards)
+        if guard_in is None:
+            return new_state, metrics
+        return guard_lib.apply_guard(state, new_state, metrics, g_shards,
+                                     psum_axis=shard_axis)
 
-    def local_step(state: TrainState, batch):
+    def local_step(state: TrainState, batch, guard_in=None):
         if sharding == "zero3":
-            return zero3_step(state, batch)
+            return zero3_step(state, batch, guard_in)
         if shard_update:
-            return sharded_step(state, batch)
+            return sharded_step(state, batch, guard_in)
+        lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
+               if guard_in is not None else loss_fn)
         obs_trace.mark(tracer, "forward", "B",
                        jax.tree.leaves(state.params)[:1], cat="compute")
         if overlap:
@@ -358,7 +409,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                 p = ddp.wrap_params_for_overlap(
                     params, plan, strategy=comm, axes=axes, comm_dtype=wire,
                     use_kernel=comm_cfg.use_kernel, tracer=tracer)
-                return loss_fn(p, b, bn)
+                return lfn(p, b, bn)
             (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
                 wrapped_loss, has_aux=True)(state.params, batch,
                                             state.bn_state)
@@ -368,7 +419,7 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
                            jax.tree.leaves(grads), cat="compute")
         else:
             (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state.params, batch, state.bn_state)
+                lfn, has_aux=True)(state.params, batch, state.bn_state)
             obs_trace.mark(tracer, "backward", "E",
                            jax.tree.leaves(grads), cat="compute")
             grads = ddp.allreduce_grads(grads, strategy=comm, axes=axes,
@@ -384,12 +435,18 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
         obs_trace.mark(tracer, "update", "B",
                        jax.tree.leaves(grads)[:1], cat="compute")
-        state, metrics = sgd_update(state, grads, metrics, new_bn)
+        # guarded: the grads are the all-reduced means (identical on every
+        # device), so the sentinel inside sgd_update needs no psum
+        state, metrics = sgd_update(state, grads, metrics, new_bn, guard_in)
         obs_trace.mark(tracer, "update", "E",
                        jax.tree.leaves(state.params), cat="compute")
         return state, metrics
 
-    def train_step(state: TrainState, batch):
+    metric_keys = ("loss", "aux", "acc", "lr")
+    if guard:
+        metric_keys = metric_keys + guard_lib.SENTINEL_KEYS
+
+    def sharded_call(state: TrainState, batch, guard_in=None):
         batch_specs = {k: P(axes, *([None] * (v.ndim - 1)))
                        for k, v in batch.items()}
         state_spec = jax.tree.map(lambda _: P(), state)
@@ -403,14 +460,29 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
             state_spec = state_spec._replace(
                 mom=jax.tree.map(lambda _: P(shard_axis), state.mom),
                 shards=jax.tree.map(lambda _: P(shard_axis), state.shards))
+        metric_specs = {k: P() for k in metric_keys}
+        if guard_in is not None:
+            return compat.shard_map(
+                local_step, mesh=mesh,
+                in_specs=(state_spec, batch_specs,
+                          {"lr_scale": P(), "loss_scale": P()}),
+                out_specs=(state_spec, metric_specs),
+            )(state, batch, guard_in)
         return compat.shard_map(
             local_step, mesh=mesh,
             in_specs=(state_spec, batch_specs),
-            out_specs=(state_spec,
-                       {"loss": P(), "aux": P(), "acc": P(), "lr": P()}),
+            out_specs=(state_spec, metric_specs),
         )(state, batch)
 
+    if guard:
+        def train_step(state: TrainState, batch, guard_in):
+            return sharded_call(state, batch, guard_in)
+    else:
+        def train_step(state: TrainState, batch):
+            return sharded_call(state, batch)
+
     # introspection for launch/dryrun/report: the resolved comm plan
+    train_step.guarded = guard
     train_step.bucket_plan = plan
     train_step.bucket_mb = bucket_mb
     train_step.tuned = tuned

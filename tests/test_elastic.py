@@ -406,6 +406,61 @@ def test_loop_sigterm_drains_and_saves(tmp_path):
     assert int(r.step) == 2
 
 
+def test_loop_preempt_drain_saves_drained_step_once(tmp_path):
+    """ISSUE 9 satellite: a drained step that also lands on the ckpt_every
+    cadence must commit ONE checkpoint, not two — the drain save is guarded
+    by last_saved_step (the old code re-saved the same step, doubling the
+    commit fsync cost and churning retention)."""
+    from repro.obs import metrics as obs_metrics
+    d = str(tmp_path)
+    mem = obs_metrics.MemorySink()
+    with obs_metrics.default_registry().use_sink(mem):
+        s, _ = loop.train(_fake_state(), _fake_step, _fake_batch, steps=10,
+                          ckpt_dir=d, ckpt_every=1, log_every=0,
+                          faults="sigterm@1")
+    assert int(s.step) == 2
+    saves = [e.value for e in mem.find("checkpoint_saved")]
+    assert [v["step"] for v in saves].count(2) == 1, saves
+    assert ckpt.available_tags(d) == ["step00000001", "step00000002"]
+
+
+def test_corrupt_fault_manifest_target(tmp_path):
+    """corrupt@s:manifest flips bytes in MANIFEST.json itself: every load
+    through the manifest must refuse with CheckpointCorruptError (manual
+    repair), never silently parse garbage."""
+    d = str(tmp_path)
+    loop.train(_fake_state(), _fake_step, _fake_batch, steps=2, ckpt_dir=d,
+               ckpt_every=1, log_every=0, faults="corrupt@2:manifest")
+    with pytest.raises(ckpt.CheckpointCorruptError, match="manifest"):
+        ckpt.load(_fake_state(), d, tag=None)
+    with pytest.raises(ckpt.CheckpointCorruptError, match="manifest"):
+        ckpt.load(_fake_state(), d, tag="step00000002")
+
+
+def test_corrupt_fault_plan_target(tmp_path):
+    """corrupt@s:plan hits the commplan_<tag>.json committed with the
+    checkpoint: the load must reject it as a corrupt checkpoint (the plan
+    is outside the payload checksum), and arming the fault against a save
+    with no CommPlan is a loud spec error, not a silent no-op."""
+    d = str(tmp_path)
+    _, model, _, step = _mk_sharded_step()
+    s = st.init_state(model, 0, sharded_plan=step.bucket_plan,
+                      n_shards=step.n_shards)
+    inj = faults.FaultInjector(faults.parse_faults("corrupt@0:plan"))
+    path = ckpt.save(s, d, tag=ckpt.step_tag(0), comm_plan=step.comm_plan)
+    inj.on_saved(path, 0)
+    with pytest.raises(ckpt.CheckpointCorruptError, match="CommPlan"):
+        ckpt.load_arrays(d, tag="step00000000")
+    with pytest.raises(comm_plan_mod.CommPlanError):
+        ckpt.load_comm_plan(d, tag="step00000000")
+
+    d2 = str(tmp_path / "noplan")
+    p2 = ckpt.save(_fake_state(), d2, tag=ckpt.step_tag(0))
+    inj2 = faults.FaultInjector(faults.parse_faults("corrupt@0:plan"))
+    with pytest.raises(faults.FaultSpecError, match="CommPlan"):
+        inj2.on_saved(p2, 0)
+
+
 # ------------------------------------------------- elastic resume (1 dev)
 
 
