@@ -28,6 +28,8 @@ ci:              ## reproduce both .github/workflows/ci.yml jobs locally
 		'zero3 timeline smoke row missing from bench artifact'; \
 		assert any('zero3_param_mem' in r['name'] for r in rows), \
 		'zero3 peak-param-memory smoke row missing from bench artifact'; \
+		assert any('zero3_param_mem_split' in r['name'] for r in rows), \
+		'split-leaf zero3 memory smoke row missing from bench artifact'; \
 		assert any('ckpt.roundtrip' in r['name'] for r in rows), \
 		'ckpt-roundtrip smoke row missing from bench artifact'; \
 		assert any('guard.overhead' in r['name'] for r in rows), \

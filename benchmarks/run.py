@@ -716,8 +716,12 @@ def bench_zero3_plan(quick: bool):
         z3r = autotune(model.param_pd, schedule="ring", axes=axes,
                        sizes=sizes, family="conv", sharding="zero3",
                        gather="ahead", candidates=(z1.bucket_mb,))
+        z2 = autotune(model.param_pd, schedule="ring", axes=axes,
+                      sizes=sizes, family="conv", sharding="zero2",
+                      candidates=(z1.bucket_mb,))
         assert z3.sim.mode == "zero3_jit_gather", z3.sim
         assert z3r.sim.mode == "zero3_retain", z3r.sim
+        assert z2.sim.mode == "zero2", z2.sim
         # retain skips the remat re-gather (one AG per group, backward
         # unstretched), so it can only be <= per_group
         assert z3r.sim.t_step_s <= z3.sim.t_step_s, (z3r.sim, z3.sim)
@@ -726,7 +730,9 @@ def bench_zero3_plan(quick: bool):
              f"-> zero3 per_group {z3.sim.t_step_s*1e3:.2f}ms / retain "
              f"{z3r.sim.t_step_s*1e3:.2f}ms @ {z1.bucket_mb:g}MB (AG "
              f"{z3r.sim.t_gather_s*1e6:.0f}us, remat-doubled "
-             f"{z3.sim.t_gather_s*1e6:.0f}us)")
+             f"{z3.sim.t_gather_s*1e6:.0f}us); zero2 baseline "
+             f"{z2.sim.t_step_s*1e3:.2f}ms (fp32 step-end AG, fully "
+             f"exposed)")
     # peak param memory: analytic and n-independent — zero1 keeps the 4N
     # fp32 replica plus the full wire image, zero3 keeps one group's wire
     # bucket + fp32 tensors at a time (docs/comm.md byte accounting)
@@ -744,6 +750,26 @@ def bench_zero3_plan(quick: bool):
          f"(4N fp32 replica + bf16 wire image) -> zero3 "
          f"{z3m.peak_bytes/2**20:.1f}MB (largest group only) = "
          f"{100*red:.1f}% reduction @ 1MB buckets, >= {n-1}/{n} floor")
+    # giant-leaf model at n=16: without leaf splitting the 778M-element
+    # qwen1.5-32b embedding would own one oversized bucket (~2.4% of N
+    # live at once — the bar breaks for n >= ~42); with splitting every
+    # span fits the budget and the (n-1)/n floor holds at n=16 too
+    t0 = time.perf_counter()
+    n16 = 16
+    big = build_model(get_config("qwen1.5-32b"))
+    splan = bucketing.make_plan(big.param_pd, bucket_mb=4.0)
+    widest = max(int(np.prod(s.shape) or 1) for s in splan.slots)
+    assert any(s.elem_offset for s in splan.slots), \
+        "qwen1.5-32b must exercise the leaf-splitting path at 4MB buckets"
+    sred = cost_mod.param_memory_reduction(splan, n16, sharding="zero3")
+    assert sred >= (n16 - 1) / n16, (
+        f"split-leaf zero3 peak-param reduction {sred:.4f} below the "
+        f"(n-1)/n={n16-1}/{n16} floor (widest leaf {widest} elems)")
+    emit("comm.zero3_param_mem_split", (time.perf_counter() - t0) * 1e6,
+         f"qwen1.5-32b @ 4MB buckets, n={n16}: widest leaf "
+         f"{widest/2**20:.0f}Mi elems split across "
+         f"{len(splan.slots) - splan.n_tensors + 1} spans; zero3 peak "
+         f"param mem reduction {100*sred:.1f}% >= {n16-1}/{n16} floor")
 
 
 def bench_ckpt_roundtrip(quick: bool):

@@ -42,6 +42,11 @@ Two extensions (docs/comm.md):
   ``gather='ahead'`` (default) hides the AG under the NEXT step's forward
   (``ddp.gather_ahead_params``, the implemented timeline); ``'at_end'``
   charges the full AG to the step (the end-of-step issue point).
+* ``sharding='zero2'`` prices the middle rung: the gradient collective is
+  the same in-backward reduce-scatter and the update runs on 1/n, but the
+  params stay a replicated fp32 master — the step-end all-gather rides a
+  4-byte fp32 wire (the masters must not quantize) and is fully exposed
+  (there is no next-forward issue point to hide it under).
 * ``sharding='zero3'`` prices the just-in-time timeline: the *forward*
   owns the param all-gathers. Bucket groups are consumed in reverse
   packing order (packing is backward-completion order), each group's AG
@@ -101,6 +106,7 @@ class OverlapSim:
                                  # zero3 per_group counts both passes)
     mode: str = "allreduce"      # 'allreduce' | 'shard_update' (AG at step
                                  # end) | 'shard_update+gather_ahead' |
+                                 # 'zero2' (fp32 AG at step end) |
                                  # 'zero3_jit_gather' | 'zero3_retain'
 
 
@@ -219,8 +225,12 @@ def resolve_policy(sharding: Optional[str], gather: Optional[str], *,
     if sharding is None:
         sharding = "zero1" if shard_update else "replicated"
     if gather is None:
-        gather = ("per_group" if sharding == "zero3"
-                  else ("ahead" if gather_ahead else "at_end"))
+        if sharding == "zero3":
+            gather = "per_group"
+        elif sharding == "zero2":
+            gather = "at_end"
+        else:
+            gather = "ahead" if gather_ahead else "at_end"
     return sharding, gather
 
 
@@ -279,8 +289,11 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
     sharded = sharding != "replicated"
     n_elems = int(sum(plan.bucket_sizes))
     n_buckets = plan.n_buckets
+    # zero2's step-end gather writes the authoritative fp32 masters — it
+    # rides a 4-byte wire regardless of the configured param wire dtype
+    ag_bytes = 4 if sharding == "zero2" else param_dtype_bytes
     ag_times = [
-        cost.predict_all_gather(axes, sizes, s * param_dtype_bytes,
+        cost.predict_all_gather(axes, sizes, s * ag_bytes,
                                 links=links).time_s
         for s in plan.bucket_sizes] if sharded else [0.0] * n_buckets
     exposed = 0.0
@@ -337,6 +350,10 @@ def simulate(plan: bucketing.BucketPlan, schedule: str,
         if sharding == "zero3":
             mode = ("zero3_jit_gather" if gather == "per_group"
                     else "zero3_retain")
+        elif sharding == "zero2":
+            t_gather = sum(ag_times)
+            exposed += t_gather          # step-end fp32 AG, fully exposed
+            mode = "zero2"
         elif gather == "ahead":
             t_gather = sum(ag_times)
             t_fwd = _forward_budget(t_backward_s, profile, t_forward_s)

@@ -33,7 +33,9 @@ import os
 import tempfile
 from typing import Optional, Sequence, Tuple, Union
 
-PLAN_VERSION = 2
+#: v3 added per-slot ``elem_offset`` (leaf-splitting spans) — v1/v2
+#: payloads load compatibly with every span at offset 0.
+PLAN_VERSION = 3
 _SHARDING_FOR_BOOL = {False: "replicated", True: "zero1"}
 
 
@@ -51,6 +53,12 @@ class SlotSpec:
     padded: int
     bucket: int
     offset: int
+    elem_offset: int = 0        # v3: span start inside the flattened tensor
+
+
+def _slot_spec(s) -> SlotSpec:
+    return SlotSpec(s.path, tuple(s.shape), s.size, s.padded, s.bucket,
+                    s.offset, getattr(s, "elem_offset", 0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +80,7 @@ class CommPlan:
     n_shards: int
     bucket_sizes: Tuple[int, ...]
     slots: Tuple[SlotSpec, ...]
-    sharding: str = "replicated"        # 'replicated' | 'zero1' | 'zero3'
+    sharding: str = "replicated"   # 'replicated'|'zero1'|'zero2'|'zero3'
     gather: str = "ahead"               # 'ahead' | 'at_end' | 'per_group'
     version: int = PLAN_VERSION
 
@@ -117,26 +125,61 @@ class CommPlan:
     def bucket_plan(self, template_tree):
         """Reconstruct the ``BucketPlan`` these buffers were packed under.
         The treedef comes from ``template_tree`` (a parameter pytree of the
-        same model); every slot's path/shape/layout is validated against
-        the serialized plan so a wrong template fails with a diff, not a
-        silent mis-slice of the checkpointed shard buffers."""
+        same model); the slot layout is taken VERBATIM from the serialized
+        plan — not re-derived by ``make_plan`` — so a v1/v2 checkpoint
+        whose legacy packing (e.g. an oversized own-bucket leaf the
+        splitting algorithm no longer produces) still loads and reshards.
+        Every serialized span is cross-checked against the template's leaf
+        sequence (paths, shapes, contiguous ``elem_offset`` coverage), so
+        a wrong template fails with a diff, not a silent mis-slice of the
+        checkpointed shard buffers."""
+        import jax
+        import numpy as np
+
         from repro.core import bucketing
-        rebuilt = bucketing.make_plan(template_tree,
-                                      bucket_mb=self.bucket_mb,
-                                      dtype_bytes=self.wire_dtype_bytes)
-        got = tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
-                             s.bucket, s.offset) for s in rebuilt.slots)
-        if got != self.slots or tuple(rebuilt.bucket_sizes) != \
-                tuple(self.bucket_sizes):
-            diffs = [f"  {a!r} != {b!r}" for a, b in zip(got, self.slots)
-                     if a != b][:5]
-            if len(got) != len(self.slots):
-                diffs.append(f"  slot count {len(got)} != {len(self.slots)}")
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template_tree)
+        want = [(bucketing._path_str(p), tuple(leaf.shape))
+                for p, leaf in reversed(leaves)]
+        # partition serialized slots per tensor (spans: elem_offset > 0)
+        groups, diffs = [], []
+        for s in self.slots:
+            if s.elem_offset == 0:
+                groups.append([])
+            if not groups:
+                diffs.append(f"  first slot {s.path!r} has elem_offset "
+                             f"{s.elem_offset} != 0")
+                break
+            groups[-1].append(s)
+        if not diffs and len(groups) != len(want):
+            diffs.append(f"  tensor count {len(want)} != {len(groups)} "
+                         f"serialized")
+        if not diffs:
+            for (path, shape), spans in zip(want, groups):
+                size = int(np.prod(shape)) if shape else 1
+                cover = 0
+                for s in spans:
+                    if (s.path, tuple(s.shape)) != (path, shape) or \
+                            s.elem_offset != cover:
+                        diffs.append(f"  {path!r} {shape} != serialized "
+                                     f"{s.path!r} {tuple(s.shape)} @ "
+                                     f"elem_offset {s.elem_offset}")
+                        break
+                    cover += s.size
+                if cover != size and not diffs:
+                    diffs.append(f"  {path!r} spans cover {cover} of "
+                                 f"{size} elements")
+                if diffs:
+                    break
+        if diffs:
             raise CommPlanError(
                 "template parameter tree does not reproduce the serialized "
                 "bucket plan — wrong model/config for this checkpoint?\n"
-                + "\n".join(diffs))
-        return rebuilt
+                + "\n".join(diffs[:5]))
+        slots = tuple(bucketing.TensorSlot(s.path, tuple(s.shape), s.size,
+                                           s.padded, s.bucket, s.offset,
+                                           s.elem_offset)
+                      for s in self.slots)
+        return bucketing.BucketPlan(slots, tuple(self.bucket_sizes), treedef)
 
     def retarget(self, axes: Sequence[str], sizes: Sequence[int],
                  template_tree, *, family: Optional[str] = None
@@ -165,8 +208,7 @@ class CommPlan:
             shard_axis=shard_axis,
             n_shards=n_shards if self.shard_update else 1,
             bucket_sizes=tuple(plan.bucket_sizes),
-            slots=tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
-                                 s.bucket, s.offset) for s in plan.slots))
+            slots=tuple(_slot_spec(s) for s in plan.slots))
 
 
 def make(comm_cfg, bucket_plan, *, resolved_bucket_mb: float,
@@ -201,9 +243,7 @@ def make(comm_cfg, bucket_plan, *, resolved_bucket_mb: float,
         mesh_sizes=tuple(int(s) for s in mesh_sizes),
         shard_axis=shard_axis, n_shards=int(n_shards),
         bucket_sizes=tuple(int(s) for s in bucket_plan.bucket_sizes),
-        slots=tuple(SlotSpec(s.path, tuple(s.shape), s.size, s.padded,
-                             s.bucket, s.offset)
-                    for s in bucket_plan.slots),
+        slots=tuple(_slot_spec(s) for s in bucket_plan.slots),
         sharding=pick(sharding, comm_cfg.sharding),
         gather=pick(gather, comm_cfg.gather))
 
@@ -217,23 +257,25 @@ def to_dict(plan: CommPlan) -> dict:
 
 
 def from_dict(d: dict) -> CommPlan:
-    """Parse a serialized plan. Version 2 is native; version 1 payloads
-    (pre-``sharding=`` policy API) load compatibly — their boolean
-    ``shard_update``/``gather_ahead`` fields map onto the policy enum
-    (``True`` → 'zero1', gather 'ahead'/'at_end') and the loaded plan is
-    upgraded in place to the current version, so a re-save writes v2."""
+    """Parse a serialized plan. Version 3 is native; version 1/2 payloads
+    load compatibly and upgrade in place (a re-save writes v3): v1's
+    boolean ``shard_update``/``gather_ahead`` fields map onto the policy
+    enum (``True`` → 'zero1', gather 'ahead'/'at_end'), and v1/v2 slot
+    rows (6-tuples, pre-leaf-splitting) gain ``elem_offset=0`` — every
+    legacy slot is a whole-tensor span."""
     if not isinstance(d, dict) or "version" not in d:
         raise CommPlanError("not a CommPlan payload (no 'version' field)")
-    if d["version"] not in (1, PLAN_VERSION):
+    if d["version"] not in (1, 2, PLAN_VERSION):
         raise CommPlanError(
             f"CommPlan version {d['version']!r} is not supported by this "
-            f"build (expected {PLAN_VERSION} or the v1 compat form) — "
+            f"build (expected {PLAN_VERSION} or the v1/v2 compat forms) — "
             f"resume with a matching repro version or re-serialize the plan")
     try:
         slots = tuple(
-            SlotSpec(path, tuple(int(x) for x in shape), int(size),
-                     int(padded), int(bucket), int(offset))
-            for path, shape, size, padded, bucket, offset in d["slots"])
+            SlotSpec(row[0], tuple(int(x) for x in row[1]), int(row[2]),
+                     int(row[3]), int(row[4]), int(row[5]),
+                     int(row[6]) if len(row) > 6 else 0)
+            for row in d["slots"])
         req = d["requested_bucket_mb"]
         if d["version"] == 1:
             sharding = _SHARDING_FOR_BOOL[bool(d["shard_update"])]

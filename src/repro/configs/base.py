@@ -12,7 +12,7 @@ import warnings
 from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
-SHARDING_LEVELS = ("replicated", "zero1", "zero3")
+SHARDING_LEVELS = ("replicated", "zero1", "zero2", "zero3")
 GATHER_MODES = ("ahead", "at_end", "per_group")
 
 
@@ -49,6 +49,14 @@ class CommConfig:
       all-gathers the wire-dtype params for the forward — RS(g)+AG(p) on
       the wire instead of AR(g). The masters never round-trip through the
       wire dtype: only the gathered forward copy is quantized.
+    * ``'zero2'`` — the cheap middle rung: gradient + optimizer lifetime
+      is sharded exactly like zero1 (in-backward reduce-scatter, packed
+      update + momentum on the local 1/n shard) but the replicated fp32
+      params stay the masters — no persistent shard state, no forward
+      re-gather, no wire-dtype quantization of the authoritative weights.
+      The updated shards all-gather back in fp32 at step end
+      (``gather='at_end'``, the only valid mode). For models that fit the
+      params but not optimizer+grads.
     * ``'zero3'`` — additionally drops the persistent full param replica:
       ``TrainState.params`` is ``None`` and each bucket group is
       all-gathered just-in-time inside the forward, consumed, and freed —
@@ -68,8 +76,10 @@ class CommConfig:
       master shards by one update). zero3: the per-group forward gathers
       are RETAINED for their backward use (no re-gather; transient full
       wire-dtype footprint within a step, still no persistent replica).
-    * ``'at_end'`` — zero1 only: AG at step end (the PR-4 timeline: fresh
-      ``params``, gather fully exposed).
+    * ``'at_end'`` — zero1: AG at step end (the PR-4 timeline: fresh
+      ``params``, gather fully exposed). zero2 (default and only mode
+      there): the step-end all-gather runs in fp32 — it writes the
+      authoritative replicated masters, which must not quantize.
     * ``'per_group'`` — zero3 (default there): just-in-time per-group
       forward gathers, re-gathered for the backward via rematerialization
       (``jax.checkpoint`` around the loss) so each group's gathered params
@@ -136,7 +146,8 @@ class CommConfig:
                     DeprecationWarning, stacklevel=3)
                 gather = "ahead" if self.gather_ahead else "at_end"
             else:
-                gather = "per_group" if sharding == "zero3" else "ahead"
+                gather = {"zero3": "per_group",
+                          "zero2": "at_end"}.get(sharding, "ahead")
         else:
             if gather not in GATHER_MODES:
                 raise ValueError(f"gather={gather!r} not in {GATHER_MODES}")
@@ -155,6 +166,11 @@ class CommConfig:
             raise ValueError(
                 "gather='per_group' is the zero3 just-in-time policy — "
                 f"meaningless with sharding={sharding!r}")
+        if sharding == "zero2" and gather == "ahead":
+            raise ValueError(
+                "sharding='zero2' keeps replicated params — there is no "
+                "start-of-step gather to move ahead; the step-end fp32 "
+                "all-gather IS the policy (gather='at_end', the default)")
         object.__setattr__(self, "sharding", sharding)
         object.__setattr__(self, "gather", gather)
         # resolved booleans stay readable for backward compatibility

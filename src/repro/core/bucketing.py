@@ -14,11 +14,20 @@ between which the collectives run.
 Chunk-aligned packing (every tensor padded to CHUNK elements) also feeds the
 batched-norm Pallas kernel: the packed buffer plus per-chunk segment ids is
 exactly the kernel's input layout.
+
+Leaf splitting: a tensor larger than the bucket budget is carved into
+CHUNK-aligned **spans**, one ``TensorSlot`` per span (``elem_offset`` marks
+where the span starts inside the flattened tensor). Split spans are
+consecutive in packing order with increasing ``elem_offset``, each full-size
+span filling its own bucket — so ``max_group_elems`` stays capped near the
+bucket budget and the ZeRO-3 peak-memory bar holds on giant-leaf models.
+Segment maps key on the *tensor* id (``slot_tensor_ids``), so LARS trust
+norms psum per-tensor partial sums across split spans unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +39,12 @@ CHUNK = 1024  # 8 sublanes x 128 lanes — TPU-aligned packing quantum
 @dataclasses.dataclass(frozen=True)
 class TensorSlot:
     path: str
-    shape: Tuple[int, ...]
-    size: int              # unpadded element count
-    padded: int            # padded to CHUNK
+    shape: Tuple[int, ...]  # FULL tensor shape (shared by every span)
+    size: int              # unpadded element count of THIS span
+    padded: int            # span padded to CHUNK
     bucket: int            # bucket index
     offset: int            # element offset within its bucket
+    elem_offset: int = 0   # span start inside the flattened tensor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,8 +58,25 @@ class BucketPlan:
         return len(self.bucket_sizes)
 
     @property
-    def n_tensors(self) -> int:
+    def n_slots(self) -> int:
         return len(self.slots)
+
+    @property
+    def n_tensors(self) -> int:
+        """Distinct tensors (a split tensor counts once, not per span)."""
+        return sum(1 for s in self.slots if s.elem_offset == 0)
+
+    @property
+    def slot_tensor_ids(self) -> Tuple[int, ...]:
+        """Per-slot tensor index in packing order: spans of one split
+        tensor share an id. The key for every segment map (LARS norms
+        accumulate per *tensor*, not per span)."""
+        ids, t = [], -1
+        for s in self.slots:
+            if s.elem_offset == 0:
+                t += 1
+            ids.append(t)
+        return tuple(ids)
 
     @property
     def groups(self) -> Tuple[Tuple[TensorSlot, ...], ...]:
@@ -69,9 +96,9 @@ class BucketPlan:
     @property
     def group_elems(self) -> Tuple[int, ...]:
         """Unpadded f32 parameter elements per bucket group — what a ZeRO-3
-        just-in-time gather materializes (the unpacked leaves), as opposed
-        to ``bucket_sizes`` (the CHUNK-padded wire buffer it unpacks
-        from). Drives the peak-live-param accounting."""
+        just-in-time gather materializes (the unpacked span pieces), as
+        opposed to ``bucket_sizes`` (the CHUNK-padded wire buffer it
+        unpacks from). Drives the peak-live-param accounting."""
         out = [0] * self.n_buckets
         for slot in self.slots:
             out[slot.bucket] += slot.size
@@ -80,8 +107,33 @@ class BucketPlan:
     @property
     def max_group_elems(self) -> int:
         """Largest group's unpadded element count — the O(largest bucket
-        group) term in the ZeRO-3 peak-memory bound."""
+        group) term in the ZeRO-3 peak-memory bound. Leaf splitting caps
+        this near the bucket budget even when a single tensor dwarfs it."""
         return max(self.group_elems) if self.slots else 0
+
+    @property
+    def slot_is_final_span(self) -> Tuple[bool, ...]:
+        """Per-slot flag: True on the LAST span of each tensor (trivially
+        every slot on unsplit plans). Spans are emitted with ascending
+        bucket index, so the final span lives in the tensor's highest
+        bucket — the group whose in-backward identity fires last under the
+        chained wrap, i.e. the one place the shard-sink path may zero the
+        leaf cotangent without starving earlier groups of the raw grad."""
+        n = len(self.slots)
+        return tuple(i + 1 == n or self.slots[i + 1].elem_offset == 0
+                     for i in range(n))
+
+    @property
+    def tensor_slots(self) -> Tuple[Tuple[TensorSlot, ...], ...]:
+        """Slots regrouped per tensor, in packing order: entry t holds the
+        span slots of tensor t, ordered by ``elem_offset`` (split spans are
+        consecutive in ``slots``, so this is a stable partition)."""
+        out: List[List[TensorSlot]] = []
+        for s in self.slots:
+            if s.elem_offset == 0:
+                out.append([])
+            out[-1].append(s)
+        return tuple(tuple(g) for g in out)
 
 
 def _path_str(path) -> str:
@@ -89,12 +141,24 @@ def _path_str(path) -> str:
                     for k in path)
 
 
-def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2
-              ) -> BucketPlan:
+def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2,
+              split_leaves: bool = True) -> BucketPlan:
     """Greedy fill: walk tensors in reverse order, open a new bucket whenever
-    the current one exceeds ``bucket_mb`` (the paper's "several megabytes")."""
+    the current one exceeds ``bucket_mb`` (the paper's "several megabytes").
+
+    A leaf whose padded size exceeds the budget is **split** into
+    CHUNK-aligned spans (one slot each): full spans fill a bucket of their
+    own and the tail span opens a fresh bucket that later leaves keep
+    filling. ``split_leaves=False`` restores the legacy behaviour (the leaf
+    gets one over-budget bucket) but emits an ``autotune_plan`` warning
+    event naming the leaf and its overflow factor. Either way the plan is
+    guarded: with splitting on, a bucket exceeding the budget raises —
+    packing regressions must be loud, not a silently-broken memory bar."""
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     target_elems = int(bucket_mb * 2 ** 20 / dtype_bytes)
+    # the largest CHUNK-aligned span that fits the budget (>= one CHUNK:
+    # sub-CHUNK budgets cannot be packed finer than the alignment quantum)
+    span_elems = max(CHUNK, (target_elems // CHUNK) * CHUNK)
     slots: List[TensorSlot] = []
     bucket_sizes: List[int] = []
     cur, cur_off = 0, 0
@@ -102,45 +166,105 @@ def make_plan(tree, *, bucket_mb: float = 4.0, dtype_bytes: int = 2
         shape = tuple(leaf.shape)
         size = int(np.prod(shape)) if shape else 1
         padded = -(-size // CHUNK) * CHUNK
+        if split_leaves and padded > target_elems:
+            # close the open bucket, then one bucket per full span
+            if cur_off:
+                bucket_sizes.append(cur_off)
+                cur, cur_off = cur + 1, 0
+            eo = 0
+            while size - eo > span_elems:
+                slots.append(TensorSlot(_path_str(path), shape, span_elems,
+                                        span_elems, cur, 0, eo))
+                bucket_sizes.append(span_elems)
+                cur, eo = cur + 1, eo + span_elems
+            rem = size - eo
+            rem_padded = -(-rem // CHUNK) * CHUNK
+            slots.append(TensorSlot(_path_str(path), shape, rem, rem_padded,
+                                    cur, 0, eo))
+            cur_off = rem_padded     # tail span leaves its bucket open
+            continue
         if cur_off and cur_off + padded > target_elems:
             bucket_sizes.append(cur_off)
             cur, cur_off = cur + 1, 0
         slots.append(TensorSlot(_path_str(path), shape, size, padded,
                                 cur, cur_off))
         cur_off += padded
-    bucket_sizes.append(cur_off)
-    return BucketPlan(tuple(slots), tuple(bucket_sizes), treedef)
+    if cur_off or not bucket_sizes:
+        bucket_sizes.append(cur_off)
+    plan = BucketPlan(tuple(slots), tuple(bucket_sizes), treedef)
+    _check_budget(plan, target_elems, split_leaves=split_leaves)
+    return plan
+
+
+def _check_budget(plan: BucketPlan, target_elems: int, *,
+                  split_leaves: bool) -> None:
+    """Oversized-group guard: with splitting on, any bucket past the budget
+    is a packing bug (raise); with splitting off it is the known legacy
+    shape, surfaced as an ``autotune_plan`` warning event naming the widest
+    leaf and its overflow factor."""
+    limit = max(target_elems, CHUNK)   # CHUNK is the packing quantum floor
+    worst = max(plan.bucket_sizes, default=0)
+    if worst <= limit:
+        return
+    b = plan.bucket_sizes.index(worst)
+    leaf = max((s for s in plan.slots if s.bucket == b),
+               key=lambda s: s.padded)
+    factor = worst / max(target_elems, 1)
+    if split_leaves:
+        raise ValueError(
+            f"bucket {b} packs {worst} elems > budget {target_elems} "
+            f"({factor:.2f}x) despite leaf splitting — packing regression "
+            f"(widest leaf {leaf.path!r})")
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.event(
+        "autotune_plan",
+        {"warning": "oversized_leaf", "leaf": leaf.path,
+         "overflow_factor": round(factor, 4), "bucket": b,
+         "bucket_elems": worst, "budget_elems": target_elems},
+        where="repro/core/bucketing.py")
 
 
 def pack(tree, plan: BucketPlan, dtype=jnp.bfloat16) -> List[jax.Array]:
     """Pytree -> list of flat per-bucket buffers (paper's allreduce
-    payloads): one ``pack_group`` per static bucket group."""
+    payloads): one ``pack_group`` per static bucket group. ``pack_group``
+    slices each slot's span out of its (full) leaf, so split tensors just
+    hand the same leaf to every bucket that holds one of their spans."""
     leaves = list(reversed(jax.tree_util.tree_leaves(tree)))
     assert len(leaves) == plan.n_tensors
+    tids = plan.slot_tensor_ids
     bufs, i = [], 0
     for group in plan.groups:
-        bufs.append(pack_group(leaves[i:i + len(group)], group, dtype=dtype))
+        gl = [leaves[tids[i + j]] for j in range(len(group))]
+        bufs.append(pack_group(gl, group, dtype=dtype))
         i += len(group)
     return bufs
 
 
 def unpack(bufs: List[jax.Array], plan: BucketPlan, dtype=jnp.float32):
     """Inverse of ``pack`` (buffers -> pytree in original structure). Like
-    ``unpack_group``, the target dtype is applied once per packed buffer."""
+    ``unpack_group``, the target dtype is applied once per packed buffer.
+    Split tensors are reassembled by concatenating their span pieces (spans
+    are consecutive in packing order, ``elem_offset`` ascending)."""
     from repro.core.precision import grads_to_master
     bufs = [grads_to_master(b) if dtype == jnp.float32 else b.astype(dtype)
             for b in bufs]
-    leaves = []
-    for slot in plan.slots:
+    leaves, pieces = [], []
+    n = len(plan.slots)
+    for i, slot in enumerate(plan.slots):
         flat = jax.lax.dynamic_slice_in_dim(bufs[slot.bucket], slot.offset,
                                             slot.padded)
-        leaves.append(flat[:slot.size].reshape(slot.shape))
+        pieces.append(flat[:slot.size])
+        if i + 1 == n or plan.slots[i + 1].elem_offset == 0:
+            full = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+            leaves.append(full.reshape(slot.shape))
+            pieces = []
     return jax.tree_util.tree_unflatten(plan.treedef, list(reversed(leaves)))
 
 
 def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
     """One bucket group's leaves -> its flat wire buffer (``leaves``
-    ordered like ``slots``, i.e. by slot offset).
+    ordered like ``slots``, i.e. by slot offset; each leaf is the FULL
+    tensor — the slot's ``elem_offset`` span is sliced out here).
 
     Staged in f32: XLA's CPU backend lowers bf16 concatenate /
     dynamic-update-slice to scalar loops (~15x slower than f32), so the
@@ -152,6 +276,8 @@ def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
     parts = []
     for slot, leaf in zip(slots, leaves):
         flat = leaf.reshape(-1).astype(stage)
+        if slot.elem_offset or slot.size != flat.shape[0]:
+            flat = flat[slot.elem_offset:slot.elem_offset + slot.size]
         if slot.padded != slot.size:
             flat = jnp.concatenate(
                 [flat, jnp.zeros(slot.padded - slot.size, stage)])
@@ -160,20 +286,30 @@ def pack_group(leaves, slots, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def unpack_group(buf: jax.Array, slots, dtype=jnp.float32):
-    """Inverse of ``pack_group``: flat buffer -> list of leaves. The master
-    dtype is applied once on the packed buffer (``precision.grads_to_master``
-    for the fp32 master policy) before slicing, not per tensor."""
+    """Inverse of ``pack_group``: flat buffer -> list of per-slot values.
+    A slot covering its whole tensor yields the reshaped tensor (the
+    historical contract); a split span yields its flat ``(size,)`` piece —
+    callers reassemble via ``elem_offset`` (see ``unpack`` /
+    ``ddp.jit_gather_params``). The master dtype is applied once on the
+    packed buffer (``precision.grads_to_master`` for the fp32 master
+    policy) before slicing, not per tensor."""
     from repro.core.precision import grads_to_master
     buf = grads_to_master(buf) if dtype == jnp.float32 else buf.astype(dtype)
-    return [buf[s.offset:s.offset + s.padded][:s.size].reshape(s.shape)
-            for s in slots]
+    out = []
+    for s in slots:
+        piece = buf[s.offset:s.offset + s.padded][:s.size]
+        if s.elem_offset == 0 and s.size == int(np.prod(s.shape) or 1):
+            piece = piece.reshape(s.shape)
+        out.append(piece)
+    return out
 
 
 def segment_ids(plan: BucketPlan) -> np.ndarray:
     """Per-CHUNK tensor index over the *concatenated* buckets — the
-    batched-norm kernel's segment map. Shape: (total_chunks,) int32."""
+    batched-norm kernel's segment map. Split spans repeat their tensor's
+    id, so per-segment sums stay per-tensor. Shape: (total_chunks,)."""
     ids = []
-    for ti, slot in enumerate(plan.slots):
+    for ti, slot in zip(plan.slot_tensor_ids, plan.slots):
         ids.extend([ti] * (slot.padded // CHUNK))
     return np.asarray(ids, np.int32)
 
@@ -239,15 +375,17 @@ def unrotate_shards(buf: jax.Array, n_shards: int) -> jax.Array:
 def shard_segment_ids(plan: BucketPlan, n_shards: int) -> List[np.ndarray]:
     """Per-bucket shard-aware segment maps: one ``(n_shards,
     chunks_per_shard)`` int32 array per bucket whose row k holds the
-    *global* tensor index (position in ``plan.slots``) of each CHUNK in
-    shard k. Padding chunks past the bucket's last tensor keep the last
-    tensor's id — harmless, their p/g/m elements are zeros, so the packed
-    update is a no-op there."""
+    *tensor* index (``slot_tensor_ids`` — spans of a split tensor share
+    one id, so ``batched_sumsq`` partial norms accumulate per tensor) of
+    each CHUNK in shard k. Padding chunks past the bucket's last tensor
+    keep the last tensor's id — harmless, their p/g/m elements are zeros,
+    so the packed update is a no-op there."""
+    tids = plan.slot_tensor_ids
     out = []
     for b, size in enumerate(plan.bucket_sizes):
         c = shard_elems(size, n_shards)
         ids = []
-        for ti, slot in enumerate(plan.slots):
+        for ti, slot in zip(tids, plan.slots):
             if slot.bucket == b:
                 ids.extend([ti] * (slot.padded // CHUNK))
         total = n_shards * c // CHUNK
@@ -257,6 +395,9 @@ def shard_segment_ids(plan: BucketPlan, n_shards: int) -> List[np.ndarray]:
 
 
 def trust_scaled_mask(plan: BucketPlan) -> np.ndarray:
-    """Static per-tensor bool mask, indexed like ``plan.slots``: True where
-    LARS trust scaling applies (>= 2-D tensors, matching lars._is_scaled)."""
-    return np.asarray([len(s.shape) >= 2 for s in plan.slots], bool)
+    """Static per-TENSOR bool mask, indexed by tensor id (the segment-map
+    key): True where LARS trust scaling applies (>= 2-D tensors, matching
+    lars._is_scaled). On unsplit plans tensor ids coincide with slot
+    indices, so the historical per-slot indexing still holds there."""
+    return np.asarray([len(s.shape) >= 2 for s in plan.slots
+                       if s.elem_offset == 0], bool)

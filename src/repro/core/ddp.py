@@ -94,8 +94,20 @@ def _overlap_bucket_fn(gi, slots, schedule, axes, comm_dtype, use_kernel,
         buf = schedule(buf, axes, use_kernel=use_kernel, interpret=interpret)
         obs_trace.mark(tracer, f"ar[b{gi}]", "E", [buf], bucket=gi)
         n = axes_size(axes)
-        outs = bucketing.unpack_group(buf, slots, dtype=jnp.float32)
-        return (tuple(o / n for o in outs),)
+        pieces = bucketing.unpack_group(buf, slots, dtype=jnp.float32)
+        outs = []
+        for slot, g, piece in zip(slots, gs, pieces):
+            if piece.shape == g.shape:          # slot covers the whole leaf
+                outs.append(piece / n)
+                continue
+            # split span: scatter the reduced span back into the raw
+            # cotangent — the leaf's other spans belong to other groups,
+            # whose identities (chained) reduce them in turn
+            flat = g.astype(jnp.float32).reshape(-1)
+            flat = jax.lax.dynamic_update_slice(flat, piece / n,
+                                                (slot.elem_offset,))
+            outs.append(flat.reshape(g.shape))
+        return (tuple(outs),)
 
     bucket_identity.defvjp(fwd, bwd)
     return bucket_identity
@@ -106,19 +118,25 @@ def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn,
     """Route each bucket group's param leaves through the identity built by
     ``make_group_fn(group_index, group_slots)`` — the shared scaffolding of
     the overlap and probe wraps, including the subtle slot-to-leaf mapping
-    (slot i describes leaf n-1-i: the plan walks reverse flatten order).
-    ``extras[gi]`` (e.g. a gradient sink) is passed as a second argument to
-    group gi's identity when given."""
+    (slot i describes leaf ``n-1-slot_tensor_ids[i]``: the plan walks
+    reverse flatten order, and a split tensor's spans all map to the one
+    leaf). A leaf spanning several groups is CHAINED through their
+    identities; groups are applied in DECREASING index order so the
+    backward fires them in bucket order (group 0 — the backward-completion
+    head — first), matching the overlap schedule. ``extras[gi]`` (e.g. a
+    gradient sink) is passed as a second argument to group gi's identity
+    when given."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
     n_leaves = len(leaves)
     assert n_leaves == plan.n_tensors
     new_leaves = list(leaves)
-    leaf_idx = {id(slot): n_leaves - 1 - i
-                for i, slot in enumerate(plan.slots)}
-    for gi, group in enumerate(plan.groups):
+    leaf_idx = {id(slot): n_leaves - 1 - t
+                for t, slot in zip(plan.slot_tensor_ids, plan.slots)}
+    for gi in range(len(plan.groups) - 1, -1, -1):
+        group = plan.groups[gi]
         idxs = [leaf_idx[id(s)] for s in group]
         fn = make_group_fn(gi, group)
-        args = (tuple(leaves[j] for j in idxs),)
+        args = (tuple(new_leaves[j] for j in idxs),)
         if extras is not None:
             args += (extras[gi],)
         outs = fn(*args)
@@ -127,17 +145,22 @@ def _wrap_param_groups(params, plan: "bucketing.BucketPlan", make_group_fn,
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
-def _shard_bucket_fn(gi, slots, rs, axes, comm_dtype, use_kernel, interpret,
-                     tracer=None):
+def _shard_bucket_fn(gi, slots, finals, rs, axes, comm_dtype, use_kernel,
+                     interpret, tracer=None):
     """custom_vjp identity over one bucket group's ``(leaves, sink)`` whose
     backward rule packs the group's cotangents, runs the schedule's
     REDUCE-SCATTER-terminal form, and emits the reduced-mean fp32 local
     shard as the cotangent of the zero-valued ``sink`` (the flax
     ``perturb`` idiom: side outputs of the backward ride on auxiliary
     inputs). The leaves' own cotangents are zeros — the sharded path never
-    materializes a full reduced gradient. With a ``tracer``, the sink fire
-    is the ``rs[b<gi>]`` span: begin on the cotangents, end on the reduced
-    shard."""
+    materializes a full reduced gradient. EXCEPT: a split tensor threads
+    through several group identities (chained in ``_wrap_param_groups``),
+    and every group after this one in the chain still needs the raw local
+    gradient to pack its own span — so only the group holding the tensor's
+    FINAL span (``finals[j]``, the last identity to fire) zeroes the leaf
+    cotangent; the others pass it through untouched. With a ``tracer``,
+    the sink fire is the ``rs[b<gi>]`` span: begin on the cotangents, end
+    on the reduced shard."""
     @jax.custom_vjp
     def bucket_identity(leaves, sink):
         del sink
@@ -154,8 +177,9 @@ def _shard_bucket_fn(gi, slots, rs, axes, comm_dtype, use_kernel, interpret,
         n = axes_size(axes)
         shard = grads_to_master(shard) / n
         obs_trace.mark(tracer, f"rs[b{gi}]", "E", [shard], bucket=gi)
-        zeros = tuple(jnp.zeros(g.shape, g.dtype) for g in gs)
-        return (zeros, shard)
+        outs = tuple(jnp.zeros(g.shape, g.dtype) if fin else g
+                     for g, fin in zip(gs, finals))
+        return (outs, shard)
 
     bucket_identity.defvjp(fwd, bwd)
     return bucket_identity
@@ -200,12 +224,17 @@ def wrap_params_for_overlap(params, plan: "bucketing.BucketPlan", *,
     if shard_sinks is not None:
         from repro.comm import get_reduce_scatter
         rs = get_reduce_scatter(strategy)
-        return _wrap_param_groups(
-            params, plan,
-            lambda gi, group: _shard_bucket_fn(gi, group, rs, tuple(axes),
-                                               comm_dtype, use_kernel,
-                                               interpret, tracer),
-            extras=shard_sinks)
+        final_map = {id(s): fin for s, fin in zip(plan.slots,
+                                                  plan.slot_is_final_span)}
+
+        def shard_fn(gi, group):
+            finals = tuple(final_map[id(s)] for s in group)
+            return _shard_bucket_fn(gi, group, finals, rs, tuple(axes),
+                                    comm_dtype, use_kernel, interpret,
+                                    tracer)
+
+        return _wrap_param_groups(params, plan, shard_fn,
+                                  extras=shard_sinks)
     from repro.comm import get_schedule
     schedule = get_schedule(strategy)
     return _wrap_param_groups(
@@ -311,14 +340,27 @@ def jit_gather_params(shards, plan: "bucketing.BucketPlan", *,
     the timelines apart. Must be called inside shard_map with the shards'
     local view."""
     from repro.comm import primitives as prim
-    leaves_slot_order = []
+    vals_slot_order = []
     for gi, group in enumerate(plan.groups):
         wire = grads_to_comm(shards[gi], dtype=wire_dtype)
         obs_trace.mark(tracer, f"ag[g{gi}]", "B", [wire], bucket=gi)
         buf = prim.ring_all_gather(wire, shard_axis, plan.bucket_sizes[gi])
         obs_trace.mark(tracer, f"ag[g{gi}]", "E", [buf], bucket=gi)
-        leaves_slot_order.extend(
+        vals_slot_order.extend(
             bucketing.unpack_group(buf, group, dtype=jnp.float32))
+    # groups concatenate back to plan.slots order (buckets are assigned in
+    # packing order); reassemble split tensors from their flat span pieces
+    leaves_slot_order, pieces = [], []
+    for slot, fin, v in zip(plan.slots, plan.slot_is_final_span,
+                            vals_slot_order):
+        if slot.elem_offset == 0 and fin:       # unsplit: already reshaped
+            leaves_slot_order.append(v)
+            continue
+        pieces.append(v)
+        if fin:
+            leaves_slot_order.append(
+                jnp.concatenate(pieces).reshape(slot.shape))
+            pieces = []
     return jax.tree_util.tree_unflatten(plan.treedef,
                                         list(reversed(leaves_slot_order)))
 

@@ -150,9 +150,12 @@ def shard_trust_ratios(param_shards, grad_shards, segs, plan, cfg: OptConfig,
     Each device holds one contiguous shard per bucket; a tensor's squared
     norm is the psum (over the shard axis) of each shard's per-CHUNK
     partial sums, routed to the tensor via the shard-aware segment map —
-    no device ever touches a full gradient. Returns a ``(n_tensors,)`` f32
-    trust vector indexed like ``plan.slots`` (1.0 for <2-D tensors and for
-    sgdm, matching ``update``'s per-tensor rules)."""
+    no device ever touches a full gradient. Split-leaf plans need no
+    special casing: the segment maps key on ``plan.slot_tensor_ids``, so a
+    tensor's spans (even across buckets) accumulate into one segment
+    before the psum. Returns a ``(n_tensors,)`` f32 trust vector indexed
+    by tensor id (1.0 for <2-D tensors and for sgdm, matching ``update``'s
+    per-tensor rules)."""
     from repro.core import bucketing
     from repro.kernels.ref import batched_sumsq
     if cfg.kind != "lars":

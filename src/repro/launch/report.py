@@ -184,9 +184,10 @@ def shard_update_section(arch: str = "resnet50") -> str:
     """Sharding-policy byte/time accounting (docs/comm.md): per schedule
     at its autotuned bucket size, the replicated timeline (AR(g) + full
     update) vs sharding='zero1' (in-backward RS(g) + update/n + AG(p) at
-    both gather issue points) vs sharding='zero3' (just-in-time AG in the
-    forward; gather='per_group' re-gathers in the backward, 'ahead'
-    retains), plus the zero3-vs-zero1 peak-param-memory reduction
+    both gather issue points) vs sharding='zero2' (replicated forward, no
+    gather; fp32 step-end write-back AG) vs sharding='zero3' (just-in-time
+    AG in the forward; gather='per_group' re-gathers in the backward,
+    'ahead' retains), plus the zero3-vs-zero1 peak-param-memory reduction
     (``comm.cost.param_memory_reduction``, n-independent)."""
     from repro.comm import available, cost as cost_mod
     from repro.comm.autotune import autotune
@@ -197,12 +198,12 @@ def shard_update_section(arch: str = "resnet50") -> str:
     cfg = get_config(arch)
     model = build_model(cfg)
     rows = [f"### Sharding-policy accounting ({arch}, bf16 wire): "
-            "replicated vs zero1 (RS+update/n+AG) vs zero3 (AG in "
-            "forward)\n",
+            "replicated vs zero1 (RS+update/n+AG) vs zero2 (replicated "
+            "fwd, fp32 AG) vs zero3 (AG in forward)\n",
             "| mesh | schedule | bucket MB | replicated | zero1 at_end "
-            "| zero1 ahead | zero3 per_group | zero3 ahead | update "
-            "| peak-mem ↓ |",
-            "|---|---|---|---|---|---|---|---|---|---|"]
+            "| zero1 ahead | zero2 | zero3 per_group | zero3 ahead "
+            "| update | peak-mem ↓ |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
     for tag, (axes, sizes) in PRODUCTION_DP_AXES.items():
         for s in available():
             ar = autotune(model.param_pd, schedule=s, axes=axes,
@@ -216,6 +217,8 @@ def shard_update_section(arch: str = "resnet50") -> str:
                         family=cfg.family, candidates=(sh.bucket_mb,))
             end = autotune(model.param_pd, sharding="zero1",
                            gather="at_end", **same)
+            z2 = autotune(model.param_pd, sharding="zero2",
+                          gather="at_end", **same)
             z3 = autotune(model.param_pd, sharding="zero3",
                           gather="per_group", **same)
             z3r = autotune(model.param_pd, sharding="zero3",
@@ -227,7 +230,8 @@ def shard_update_section(arch: str = "resnet50") -> str:
             rows.append(
                 f"| {tag} | {s} | {sh.bucket_mb:g} "
                 f"| {fmt_t(ar.sim.t_step_s)} | {fmt_t(end.sim.t_step_s)} "
-                f"| {fmt_t(sh.sim.t_step_s)} | {fmt_t(z3.sim.t_step_s)} "
+                f"| {fmt_t(sh.sim.t_step_s)} | {fmt_t(z2.sim.t_step_s)} "
+                f"| {fmt_t(z3.sim.t_step_s)} "
                 f"| {fmt_t(z3r.sim.t_step_s)} "
                 f"| {fmt_t(ar.sim.t_update_s)}→{fmt_t(sh.sim.t_update_s)} "
                 f"| {100 * red:.1f}% |")

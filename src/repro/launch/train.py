@@ -60,10 +60,13 @@ def main(argv=None):
                     help="post-backward collectives instead of issuing "
                          "each bucket's all-reduce inside the backward")
     ap.add_argument("--sharding", default=None,
-                    choices=["replicated", "zero1", "zero3"],
+                    choices=["replicated", "zero1", "zero2", "zero3"],
                     help="param/optimizer sharding policy: 'replicated' "
                          "(default) trains on a full replica; 'zero1' "
                          "reduce-scatters grads and shards the update; "
+                         "'zero2' shards the gradient+optimizer lifetimes "
+                         "but keeps the replicated fp32 masters in the "
+                         "forward (no gather; fp32 step-end write-back); "
                          "'zero3' additionally drops the persistent param "
                          "replica and all-gathers each bucket group just "
                          "in time during the forward (docs/comm.md)")
@@ -201,7 +204,8 @@ def _run(args, *, reg: obs_metrics.Registry,
             raise SystemExit(
                 "--no-gather-ahead conflicts with --gather ahead — "
                 "drop the deprecated flag")
-    if sharding in ("zero1", "zero3") and args.comm in ("xla", "naive"):
+    if (sharding in ("zero1", "zero2", "zero3")
+            and args.comm in ("xla", "naive")):
         raise SystemExit(
             f"--sharding {sharding} needs an explicit-DP schedule "
             f"(--comm {{bucketed,psum,ring,hierarchical,2d_torus,dbtree}}), "
@@ -274,7 +278,9 @@ def _run(args, *, reg: obs_metrics.Registry,
         ag_at = {"ahead": ("retained forward copies"
                            if train_step.sharding == "zero3" else
                            "gather-ahead (hidden under next forward)"),
-                 "at_end": "step-end",
+                 "at_end": ("fp32 step-end (replica write-back)"
+                            if train_step.sharding == "zero2"
+                            else "step-end"),
                  "per_group": "per-group just-in-time (remat re-gather)",
                  }[train_step.gather]
         reg.event("shard_update_plan",
@@ -290,7 +296,9 @@ def _run(args, *, reg: obs_metrics.Registry,
                        else None,
                        n_shards=train_step.n_shards if sharded else 1,
                        materialize_params=getattr(train_step, "sharding",
-                                                  "replicated") != "zero3")
+                                                  "replicated") != "zero3",
+                       shard_params=getattr(train_step, "sharding",
+                                            "replicated") != "zero2")
     if args.resume_elastic:
         from repro.train import elastic
         new_n = train_step.n_shards if sharded else 1

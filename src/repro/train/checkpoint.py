@@ -35,6 +35,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.train.state import TrainState
 
 _SEP = "|"
@@ -253,8 +254,13 @@ def _resolve_tag(ckpt_dir: str, tag: Optional[str]) -> str:
             verify(ckpt_dir, t)
             return t
         except CheckpointCorruptError as e:
-            print(f"checkpoint {t!r} fails verification ({e}); trying the "
-                  f"previous one", flush=True)
+            # a silent skip hides data loss from the operator: every
+            # rejected tag is a checkpoint that will never be resumed
+            obs_metrics.event(
+                "checkpoint_fallback",
+                {"rejected_tag": t, "error": str(e),
+                 "dir": ckpt_dir},
+                where="repro/train/checkpoint.py")
             last_err = e
     raise CheckpointCorruptError(
         f"every committed checkpoint in {ckpt_dir!r} fails verification; "

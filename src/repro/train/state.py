@@ -87,22 +87,30 @@ def restore_snapshot(host_state: TrainState) -> TrainState:
 
 def init_state(model, seed: int = 0, mesh=None, opt_kind: str = "lars",
                sharded_plan=None, n_shards: int = 1,
-               materialize_params: bool = True) -> TrainState:
+               materialize_params: bool = True,
+               shard_params: bool = True) -> TrainState:
     """``sharded_plan`` (a ``BucketPlan``, typically
     ``train_step.bucket_plan``) switches the momentum leaves to the packed
-    sharded layout expected by ``CommConfig.sharding='zero1'|'zero3'``
-    steps and materializes the persistent master shards.
+    sharded layout expected by ``CommConfig.sharding='zero1'|'zero2'|
+    'zero3'`` steps and materializes the persistent master shards.
     ``materialize_params=False`` (the ZeRO-3 state) drops the full
     ``params`` replica after packing the shards — every full-params read
     must then go through ``full_params_from_shards`` (or the loop's
-    ``authoritative_params`` reader)."""
+    ``authoritative_params`` reader). ``shard_params=False`` (the ZeRO-2
+    state) keeps the replicated fp32 ``params`` as the authoritative
+    masters and packs only the momentum: ``shards`` stays None and the
+    zero2 step slices its transient master shard per bucket itself."""
     params = pinit.materialize(model.param_pd, seed, mesh)
     shards = None
     if sharded_plan is not None:
         mom = init_packed_momentum(sharded_plan, n_shards)
-        shards = init_packed_shards(params, sharded_plan, n_shards)
-        if not materialize_params:
-            params = None
+        if shard_params:
+            shards = init_packed_shards(params, sharded_plan, n_shards)
+            if not materialize_params:
+                params = None
+        else:
+            assert materialize_params, \
+                "shard_params=False (ZeRO-2) keeps the replicated masters"
     else:
         assert materialize_params, \
             "materialize_params=False requires a sharded_plan (ZeRO-3)"

@@ -95,6 +95,13 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
     n_shards=train_step.n_shards)``). Under 'zero1' the returned state's
     ``params`` is the gathered forward copy — with ``gather='ahead'``
     (default) it lags the authoritative ``shards`` by one update. Under
+    'zero2' the state keeps the REPLICATED fp32 ``params`` as the
+    authoritative masters (``shards=None``) and shards only the momentum
+    (``init_state(..., sharded_plan=..., n_shards=..., shard_params=
+    False)``): the forward runs on the replica with no gather at all, the
+    backward reduce-scatters the grads exactly like zero1, the update
+    runs on a transient 1/n slice of the packed masters, and one fp32
+    step-end all-gather writes the replica back. Under
     'zero3' the state carries NO ``params`` (None): the forward rebuilds
     them per bucket group just-in-time (``ddp.jit_gather_params``) and
     ``gather='per_group'`` (default) re-gathers each group for its
@@ -141,10 +148,10 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         return guard_lib.apply_guard(state, new_state, metrics, grads)
 
     if comm == "xla":
-        assert comm_cfg.sharding != "zero3", (
-            "sharding='zero3' needs the explicit-DDP path (a schedule from "
-            "repro.comm.registry), not comm='xla' — GSPMD owns the param "
-            "layout there (use FSDP PartitionSpecs instead)")
+        assert comm_cfg.sharding not in ("zero2", "zero3"), (
+            f"sharding={comm_cfg.sharding!r} needs the explicit-DDP path "
+            "(a schedule from repro.comm.registry), not comm='xla' — GSPMD "
+            "owns the param layout there (use FSDP PartitionSpecs instead)")
 
         def xla_step(state: TrainState, batch, guard_in=None):
             lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
@@ -395,9 +402,85 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         return guard_lib.apply_guard(state, new_state, metrics, g_shards,
                                      psum_axis=shard_axis)
 
+    def zero2_step(state: TrainState, batch, guard_in=None):
+        lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
+               if guard_in is not None else loss_fn)
+        # ZeRO-2: the replicated fp32 ``params`` ARE the authoritative
+        # masters (shards=None, no start-of-step gather). Only the
+        # gradient + optimizer lifetimes shard: the backward reduce-
+        # scatters into 1/n fp32 gradient shards exactly like zero1, the
+        # update runs on a TRANSIENT 1/n slice of the packed masters
+        # against the persistent sharded momentum, and one fp32 step-end
+        # all-gather (fp32: the masters must never round-trip through
+        # the wire dtype) writes the updated replica back.
+        params = state.params
+        obs_trace.mark(tracer, "forward", "B",
+                       jax.tree.leaves(params)[:1], cat="compute")
+        if overlap:
+            sinks = ddp.make_shard_sinks(plan, n_shards)
+
+            def sink_loss2(sks, p, b, bn):
+                p = ddp.wrap_params_for_overlap(
+                    p, plan, strategy=comm, axes=axes, comm_dtype=wire,
+                    use_kernel=comm_cfg.use_kernel, shard_sinks=sks,
+                    tracer=tracer)
+                return lfn(p, b, bn)
+
+            (loss_val, (metrics, new_bn)), g_shards = jax.value_and_grad(
+                sink_loss2, has_aux=True)(sinks, params, batch,
+                                          state.bn_state)
+            g_shards = list(g_shards)
+            obs_trace.mark(tracer, "backward", "E", g_shards, cat="compute")
+        else:
+            (loss_val, (metrics, new_bn)), grads = jax.value_and_grad(
+                lfn, has_aux=True)(params, batch, state.bn_state)
+            obs_trace.mark(tracer, "backward", "E",
+                           jax.tree.leaves(grads), cat="compute")
+            g_shards = ddp.reduce_scatter_grads(
+                grads, strategy=comm, axes=axes, plan=plan, comm_dtype=wire,
+                use_kernel=comm_cfg.use_kernel, tracer=tracer)
+        obs_trace.mark(tracer, "forward", "E", [loss_val], cat="compute")
+        obs_trace.mark(tracer, "backward", "B", [loss_val], cat="compute")
+        if new_bn is not None:
+            new_bn = jax.tree.map(lambda v: jax.lax.pmean(v, axes), new_bn)
+        metrics = {k: jax.lax.pmean(v, axes) for k, v in metrics.items()}
+        lr = schedule(state.step)
+        if guard_in is not None:
+            lr = lr * guard_in["lr_scale"]
+        obs_trace.mark(tracer, "update", "B", g_shards, cat="compute")
+        # transient local master shards: pack the replica into the bucket
+        # buffers and slice this device's ring chunk (the same chunk the
+        # reduce-scatter left here — comm.primitives.shard_index); each
+        # slice is O(N/n) live and dies once the packed update consumes it
+        from repro.comm.primitives import shard_index
+        k = shard_index(shard_axis)
+        p_shards = []
+        for buf in bucketing.pack(params, plan, dtype=jnp.float32):
+            padded = bucketing.pad_to_shards(buf, n_shards)
+            c = padded.shape[0] // n_shards
+            p_shards.append(jax.lax.dynamic_slice(padded, (k * c,), (c,)))
+        p_shards, m_shards = lars.sharded_update_from_shards(
+            p_shards, g_shards, list(state.mom), lr, opt_cfg,
+            plan, shard_axis=shard_axis, n_shards=n_shards,
+            update_kernel=comm_cfg.update_kernel)
+        obs_trace.mark(tracer, "update", "E", p_shards, cat="compute")
+        new_params = ddp.all_gather_params(p_shards, plan,
+                                           shard_axis=shard_axis,
+                                           wire_dtype=jnp.float32,
+                                           tracer=tracer)
+        metrics = dict(metrics, lr=lr)
+        new_state = TrainState(state.step + 1, new_params, m_shards,
+                               new_bn, None)
+        if guard_in is None:
+            return new_state, metrics
+        return guard_lib.apply_guard(state, new_state, metrics, g_shards,
+                                     psum_axis=shard_axis)
+
     def local_step(state: TrainState, batch, guard_in=None):
         if sharding == "zero3":
             return zero3_step(state, batch, guard_in)
+        if sharding == "zero2":
+            return zero2_step(state, batch, guard_in)
         if shard_update:
             return sharded_step(state, batch, guard_in)
         lfn = (guard_lib.scale_loss(loss_fn, guard_in["loss_scale"])
@@ -450,7 +533,16 @@ def make_train_step(model, opt_cfg: lars.OptConfig, schedule, *,
         batch_specs = {k: P(axes, *([None] * (v.ndim - 1)))
                        for k, v in batch.items()}
         state_spec = jax.tree.map(lambda _: P(), state)
-        if shard_update:
+        if sharding == "zero2":
+            assert state.params is not None and state.shards is None, (
+                "sharding='zero2' keeps the replicated params as masters "
+                "with sharded momentum and NO shard field: init_state(..., "
+                "sharded_plan=train_step.bucket_plan, "
+                "n_shards=train_step.n_shards, shard_params=False)")
+            # only the momentum persists sharded; params stay replicated
+            state_spec = state_spec._replace(
+                mom=jax.tree.map(lambda _: P(shard_axis), state.mom))
+        elif shard_update:
             assert state.shards is not None, (
                 f"sharding={sharding!r} needs the persistent-shard state: "
                 "init_state(..., sharded_plan=train_step.bucket_plan, "

@@ -774,13 +774,19 @@ def run(comm_cfg):
     s = st.init_state(model, 0,
                       sharded_plan=step.bucket_plan if sharded else None,
                       n_shards=step.n_shards if sharded else 1,
-                      materialize_params=step.sharding != "zero3")
+                      materialize_params=step.sharding != "zero3",
+                      shard_params=step.sharding != "zero2")
     f = jax.jit(step)
     for _ in range(2):
         s, m = f(s, bf(s.step))
     if step.sharding == "zero3":
         # ZeRO-3 contract: no persistent full replica, before or after
         assert s.params is None, "zero3 state rematerialized params"
+    if step.sharding == "zero2":
+        # ZeRO-2 contract: the replicated params ARE the masters — no
+        # shard field ever materializes
+        assert s.shards is None, "zero2 state grew master shards"
+        return s, m, s.params
     if sharded:
         # authoritative masters live in the persistent shards
         full = st.full_params_from_shards(s.shards, step.bucket_plan,
@@ -856,6 +862,34 @@ for tag, cc in z3_cells:
     ml = abs(float(base_m["loss"]) - float(sh_m["loss"]))
     assert md <= 1e-6 and ml <= 1e-6, (MESH, tag, md, ml)
     print(f"OK shard-step {MESH} zero3/{tag} maxdiff={md:.1e}")
+
+# ZeRO-2 + split-leaf cells (flat mesh) — against the same ring fp32
+# oracle. 0.25 MB f32 buckets split 7 of the reduced ResNet's conv
+# leaves across bucket boundaries, so the split-aware packing, the
+# tensor-id segment maps (LARS trust from cross-bucket partial norms),
+# the chained in-backward collectives, and zero3's piece-wise jit
+# gather all sit on the verified <=1e-6 path
+if MESH == "flat":
+    for tag, cc in [
+        ("zero2", CommConfig(strategy="ring", bucket_mb=1.0,
+                             wire_dtype="f32", sharding="zero2")),
+        ("zero2-split", CommConfig(strategy="ring", bucket_mb=0.25,
+                                   wire_dtype="f32", sharding="zero2")),
+        ("zero3-split", CommConfig(strategy="ring", bucket_mb=0.25,
+                                   wire_dtype="f32", sharding="zero3")),
+    ]:
+        if "split" in tag:
+            import repro.core.bucketing as _bk
+            _plan = _bk.make_plan(model.param_pd, bucket_mb=0.25,
+                                  dtype_bytes=4)
+            assert any(sl.elem_offset for sl in _plan.slots), \
+                "split cell does not split any leaf"
+        sh_s, sh_m, sh_p = run(cc)
+        md = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.abs(a - b).max()), base_p, sh_p)))
+        ml = abs(float(base_m["loss"]) - float(sh_m["loss"]))
+        assert md <= 1e-6 and ml <= 1e-6, (MESH, tag, md, ml)
+        print(f"OK shard-step {MESH} {tag} maxdiff={md:.1e}")
 print("STEP-MATRIX-OK")
 """
 
@@ -874,10 +908,14 @@ def test_sharded_step_matrix_8dev(mesh_tag):
     gather and non-overlapped on flat) hold the same <=1e-6 bar with NO
     persistent param replica — ``state.params is None`` throughout, the
     forward all-gathering each bucket group just-in-time and the
-    per_group backward re-gathering via rematerialization. Slow: every
-    cell is a full ResNet compile on the 8-device CPU mesh (~70 s each;
-    16 cells flat, 11 pod) — hence the wide timeout and the per-mesh
-    parametrization."""
+    per_group backward re-gathering via rematerialization. The flat mesh
+    adds the ZeRO-2 middle rung (replicated fp32 masters, sharded
+    grad+optimizer lifetimes, fp32 step-end write-back) and the
+    split-leaf cells (0.25 MB buckets split 7 conv leaves across bucket
+    boundaries) for both zero2 and zero3, all on the same <=1e-6 bar.
+    Slow: every cell is a full ResNet compile on the 8-device CPU mesh
+    (~70 s each; 19 cells flat, 11 pod) — hence the wide timeout and the
+    per-mesh parametrization."""
     r = subprocess.run([sys.executable, "-c", SHARD_STEP_SCRIPT, mesh_tag],
                        capture_output=True, text=True, timeout=2700,
                        env={**os.environ, "PYTHONPATH": "src"})
@@ -1050,6 +1088,19 @@ def test_resolve_policy_maps_booleans_and_defaults():
     assert resolve_policy("zero3", None) == ("zero3", "per_group")
     assert resolve_policy("zero3", "ahead") == ("zero3", "ahead")
     assert resolve_policy("zero1", None) == ("zero1", "ahead")
+    assert resolve_policy("zero2", None) == ("zero2", "at_end")
+
+
+def test_comm_config_zero2_rejects_gather_ahead():
+    """zero2 keeps the replica live through the forward, so there is no
+    next-step gather to move ahead — 'ahead' is a config error, not a
+    silent no-op."""
+    from repro.configs.base import CommConfig
+    cc = CommConfig(strategy="ring", bucket_mb=1.0, sharding="zero2")
+    assert (cc.sharding, cc.gather) == ("zero2", "at_end")
+    with pytest.raises(ValueError):
+        CommConfig(strategy="ring", bucket_mb=1.0, sharding="zero2",
+                   gather="ahead")
 
 
 def test_comm_config_boolean_shims_warn_and_resolve_identically():
@@ -1125,20 +1176,95 @@ def test_param_memory_accounting_clears_the_floor():
     plan = bucketing.make_plan(model.param_pd, bucket_mb=1.0)
     rep = cost.param_memory(plan, 8, sharding="replicated")
     z1 = cost.param_memory(plan, 8, sharding="zero1")
+    z2 = cost.param_memory(plan, 8, sharding="zero2")
     z3 = cost.param_memory(plan, 8, sharding="zero3")
     assert rep.peak_bytes == 0           # baseline: the replica itself
-    n_padded = sum(plan.bucket_sizes)
+    # the wire/transient image is the PADDED sharded layout
+    # (n * shard_elems per bucket), not the raw bucket size — the bug the
+    # padded_bucket_elems fix closes
+    padded = cost.padded_bucket_elems(plan, 8)
+    assert all(p >= b for p, b in zip(padded, plan.bucket_sizes))
     n_unpadded = sum(plan.group_elems)
     assert z1.persistent_bytes == 4 * n_unpadded
-    assert z1.transient_bytes == 2 * n_padded
+    assert z1.transient_bytes == 2 * sum(padded)
+    # zero2 keeps the 4N replica persistent and pays the fp32 wire image
+    assert z2.persistent_bytes == 4 * n_unpadded
+    assert z2.transient_bytes == 4 * sum(padded)
     assert z3.persistent_bytes == 0
+    # the 2M-elem fc kernel splits at 1 MB buckets; under the default
+    # span-streaming accounting the peak is still per-group — splitting
+    # is exactly what keeps it near the bucket budget
+    assert any(s.elem_offset for s in plan.slots)
+    assert cost._zero3_live_elems(plan) == plan.group_elems
     assert z3.peak_bytes == max(
-        2 * b + 4 * g for b, g in zip(plan.bucket_sizes, plan.group_elems))
+        2 * b + 4 * g for b, g in zip(padded, plan.group_elems))
     red = cost.param_memory_reduction(plan, 8)
     assert red == pytest.approx(1 - z3.peak_bytes / z1.peak_bytes)
     assert red >= 7 / 8, f"zero3 peak-param reduction {red:.4f} < 7/8"
-    # n-independence: the accounting is per-device bytes, not per-mesh
-    assert cost.param_memory_reduction(plan, 16) == pytest.approx(red)
+    # near-n-independence: only the CHUNK-level shard padding varies with
+    # n, a vanishing fraction of the 25M-param plan
+    assert cost.param_memory_reduction(plan, 16) == pytest.approx(red,
+                                                                  rel=1e-2)
+
+
+def test_param_memory_padding_regression():
+    """Satellite regression for ``padded_bucket_elems``: a bucket whose
+    size is NOT divisible by n_shards*CHUNK costs ``n * shard_elems``
+    wire bytes — each device sends/receives its padded chunk — which is
+    strictly more than the raw bucket size the old accounting charged."""
+    tree = {"a": jnp.zeros((3 * bucketing.CHUNK + 7,)),
+            "b": jnp.zeros((5, 5))}
+    plan = bucketing.make_plan(tree, bucket_mb=1.0)
+    n = 8
+    padded = cost.padded_bucket_elems(plan, n)
+    for p, b in zip(padded, plan.bucket_sizes):
+        assert p == n * bucketing.shard_elems(b, n)
+        assert p % (n * bucketing.CHUNK) == 0
+    # 5 CHUNKs over 8 shards pad up to 8 CHUNKs — visible, not epsilon
+    assert padded[0] > plan.bucket_sizes[0]
+    z1 = cost.param_memory(plan, n, sharding="zero1")
+    assert z1.transient_bytes == 2 * sum(padded)
+    assert z1.transient_bytes > 2 * sum(plan.bucket_sizes)
+
+
+def test_param_memory_split_leaf_bounds():
+    """zero3 live accounting on a split leaf, both consumer models. The
+    default (span-streaming) bound is per-group — splitting caps it near
+    the bucket budget, so the reduction clears (n-1)/n on a giant-leaf
+    tree; ``streaming_spans=False`` prices the assembled-tensor consumer,
+    where a span's bucket also retains every EARLIER-gathered span of the
+    same tensor (the whole tensor only dies once assembled) and the floor
+    is the widest leaf."""
+    chunk = bucketing.CHUNK
+    tree = {"giant": jnp.zeros((12 * chunk, 3)),
+            "small": jnp.zeros((64, 8))}
+    mb = 4 * chunk * 2 / 2**20           # 4-CHUNK bucket budget (bf16)
+    plan = bucketing.make_plan(tree, bucket_mb=mb, dtype_bytes=2)
+    assert any(s.elem_offset for s in plan.slots)
+    # default: streaming — live IS the per-group elems, and param_memory
+    # uses it
+    assert cost._zero3_live_elems(plan) == plan.group_elems
+    z3 = cost.param_memory(plan, 8, sharding="zero3")
+    padded = cost.padded_bucket_elems(plan, 8)
+    assert z3.peak_bytes == max(2 * b + 4 * g for b, g in
+                                zip(padded, plan.group_elems))
+    spans = [s for s in plan.slots if s.path == "giant"]
+    assert len(spans) > 2
+    # assembled consumer: gather walks groups in DESCENDING bucket order
+    # (forward order), so within the span chain the highest-bucket span
+    # is gathered first and each lower bucket retains the suffix gathered
+    # before it
+    live = cost._zero3_live_elems(plan, streaming_spans=False)
+    for i, s in enumerate(spans):
+        suffix = sum(t.size for t in spans[i + 1:])
+        assert live[s.bucket] >= plan.group_elems[s.bucket] + suffix - \
+            s.size  # its own size is already in group_elems
+    # the last-assembled span's bucket holds ~the whole tensor live
+    assert max(live) >= sum(s.size for s in spans)
+    z3a = cost.param_memory(plan, 8, sharding="zero3",
+                            streaming_spans=False)
+    assert z3a.peak_bytes >= 4 * sum(s.size for s in spans)
+    assert z3a.peak_bytes > z3.peak_bytes
 
 
 def test_plan_for_facade_assembles_commplan():

@@ -129,17 +129,23 @@ def test_commplan_retarget_new_mesh():
     assert comm_plan_mod.loads(comm_plan_mod.dumps(re)) == re
 
 
-def test_commplan_v1_payload_upgrades_to_v2():
-    """PLAN_VERSION 2 (the ``sharding=`` policy API): a v1 payload —
-    booleans only, no enum fields — loads compatibly, the booleans
-    mapping onto the policy enum, and the loaded plan is upgraded in
-    place so a re-save writes native v2."""
-    _, _, _, step = _mk_sharded_step()       # zero1 via the boolean shim
+def test_commplan_v1_v2_payloads_upgrade_to_v3():
+    """PLAN_VERSION 3 (split-leaf slots): a v1 payload — booleans only,
+    no enum fields — and a v2 payload — enum pair, 6-element slot rows
+    without the elem_offset column — both load compatibly and upgrade in
+    place so a re-save writes native v3."""
+    # bucket_mb=1.0 so no leaf splits: a legacy payload's 6-element slot
+    # rows can only describe an unsplit layout, so the fixture must be
+    # one (the split legacy case lives in
+    # test_commplan_v2_oversized_leaf_layout_loads_and_reshards)
+    _, _, _, step = _mk_sharded_step(bucket_mb=1.0)  # zero1, boolean shim
+    assert all(s.elem_offset == 0 for s in step.comm_plan.slots)
     d = comm_plan_mod.to_dict(step.comm_plan)
-    assert d["version"] == comm_plan_mod.PLAN_VERSION == 2
+    assert d["version"] == comm_plan_mod.PLAN_VERSION == 3
     v1 = dict(d)
     v1["version"] = 1
     del v1["sharding"], v1["gather"]          # v1 never had the enum pair
+    v1["slots"] = [list(row)[:6] for row in v1["slots"]]  # nor elem_offset
     up = comm_plan_mod.from_dict(v1)
     assert up.version == comm_plan_mod.PLAN_VERSION
     assert (up.sharding, up.gather) == ("zero1", "ahead")
@@ -148,7 +154,15 @@ def test_commplan_v1_payload_upgrades_to_v2():
     v1["gather_ahead"] = False
     up2 = comm_plan_mod.from_dict(v1)
     assert (up2.sharding, up2.gather) == ("zero1", "at_end")
-    # a round trip of the upgraded plan stays native v2
+    # v2: enum pair present, slot rows still missing the elem_offset
+    # column (every v2 slot is a whole tensor)
+    v2 = dict(d)
+    v2["version"] = 2
+    v2["slots"] = [list(row)[:6] for row in v2["slots"]]
+    up3 = comm_plan_mod.from_dict(v2)
+    assert up3 == step.comm_plan
+    assert all(s.elem_offset == 0 for s in up3.slots)
+    # a round trip of the upgraded plan stays native v3
     again = comm_plan_mod.loads(comm_plan_mod.dumps(up))
     assert again.version == comm_plan_mod.PLAN_VERSION and again == up
 
@@ -243,12 +257,76 @@ def test_reshard_buffers_validates_layout():
         elastic.reshard_buffers(old, plan, 8, plan, 2)   # wrong old_n
 
 
+def test_reshard_split_leaf_plans_exact():
+    """8→4 reshard between two plans that both SPLIT the giant leaf — at
+    different span boundaries — stays bit-exact for masters and momentum
+    (the n→m relayout goes through unpack-to-tree, so span geometry never
+    leaks into the restored values)."""
+    chunk = bucketing.CHUNK
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    tree = {"giant": jax.random.normal(ks[0], (10 * chunk + 77,),
+                                       jnp.float32),
+            "w": jax.random.normal(ks[1], (33, 5), jnp.float32)}
+    plan_a = bucketing.make_plan(tree, bucket_mb=3 * chunk * 2 / 2**20)
+    plan_b = bucketing.make_plan(tree, bucket_mb=4 * chunk * 2 / 2**20)
+    assert any(s.elem_offset for s in plan_a.slots)
+    assert any(s.elem_offset for s in plan_b.slots)
+    assert plan_a.bucket_sizes != plan_b.bucket_sizes
+    for bufs in (st.init_packed_shards(tree, plan_a, 8),      # masters
+                 st.init_packed_momentum(plan_a, 8)):         # momentum
+        new = elastic.reshard_buffers(bufs, plan_a, 8, plan_b, 4)
+        back = st.full_params_from_shards(new, plan_b, 4)
+        want = st.full_params_from_shards(bufs, plan_a, 8)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), want, back)
+
+
+def test_commplan_v2_oversized_leaf_layout_loads_and_reshards():
+    """Acceptance: a v2 CommPlan saved BEFORE leaf splitting can carry an
+    oversized own-bucket leaf. ``bucket_plan()`` must reconstruct that
+    exact legacy layout (not re-pack it under the new packer, not trip
+    the new budget guard), and its buffers must reshard onto a fresh
+    split-leaf plan bit-exact."""
+    chunk = bucketing.CHUNK
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    tree = {"giant": jax.random.normal(ks[0], (7 * chunk + 19,),
+                                       jnp.float32),
+            "w": jax.random.normal(ks[1], (40, 11), jnp.float32)}
+    mb = 2 * chunk * 2 / 2**20
+    legacy = bucketing.make_plan(tree, bucket_mb=mb, split_leaves=False)
+    assert max(legacy.bucket_sizes) > 2 * chunk   # the oversized bucket
+    cc = CommConfig(strategy="ring", bucket_mb=mb, sharding="zero1")
+    cp = comm_plan_mod.make(cc, legacy, resolved_bucket_mb=mb,
+                            mesh_axes=("data",), mesh_sizes=(8,),
+                            shard_axis="data", n_shards=8)
+    d = comm_plan_mod.to_dict(cp)
+    d["version"] = 2
+    d["slots"] = [list(row)[:6] for row in d["slots"]]
+    loaded = comm_plan_mod.from_dict(d)
+    lp = loaded.bucket_plan(tree)
+    assert lp.bucket_sizes == legacy.bucket_sizes
+    assert all(s.elem_offset == 0 for s in lp.slots)
+    old = st.init_packed_shards(tree, lp, 8)
+    new_plan = bucketing.make_plan(tree, bucket_mb=mb)    # splits today
+    assert any(s.elem_offset for s in new_plan.slots)
+    new = elastic.reshard_buffers(old, lp, 8, new_plan, 4)
+    want = st.init_packed_shards(tree, new_plan, 4)
+    for got, exp in zip(new, want):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    back = st.full_params_from_shards(new, new_plan, 4)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, back)
+
+
 # ------------------------------------- atomic checkpoints + manifest
 
 
 def test_checkpoint_manifest_checksum_and_fallback(tmp_path):
     """Corrupting the newest payload is caught by the sha256 manifest and
-    tag=None falls back to the previous committed checkpoint."""
+    tag=None falls back to the previous committed checkpoint — emitting a
+    ``checkpoint_fallback`` metrics event that names the rejected tag
+    (the skip must be observable, not a silent print)."""
+    from repro.obs import metrics as obs_metrics
     d = str(tmp_path)
     s = _fake_state()
     s1 = TrainState(jnp.int32(1), {"w": jnp.ones((4,))}, s.mom, None, None)
@@ -262,9 +340,15 @@ def test_checkpoint_manifest_checksum_and_fallback(tmp_path):
     faults.corrupt_file(os.path.join(d, "ckpt_step00000002.npz"))
     with pytest.raises(ckpt.CheckpointCorruptError, match="checksum"):
         ckpt.verify(d, "step00000002")
-    restored = ckpt.load(_fake_state(), d, tag=None)
+    with obs_metrics.default_registry().use_sink(
+            obs_metrics.MemorySink()) as mem:
+        restored = ckpt.load(_fake_state(), d, tag=None)
     assert int(restored.step) == 1
     np.testing.assert_array_equal(np.asarray(restored.params["w"]), 1.0)
+    fb = mem.find("checkpoint_fallback")
+    assert len(fb) == 1, [e.name for e in mem.events]
+    assert fb[0].value["rejected_tag"] == "step00000002"
+    assert "checksum" in fb[0].value["error"]
 
     # every entry corrupt -> CheckpointCorruptError, not a silent load
     faults.corrupt_file(os.path.join(d, "ckpt_step00000001.npz"))
